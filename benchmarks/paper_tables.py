@@ -1,0 +1,163 @@
+"""Benchmarks reproducing the paper's tables/figures (one fn per artifact).
+
+Each returns (rows, derived) where rows are CSV-able dicts; `benchmarks.run`
+aggregates and prints ``name,us_per_call,derived``.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _time(fn, *args, n=3, **kw):
+    fn(*args, **kw)  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out) if hasattr(out, "block_until_ready") else None
+    return (time.perf_counter() - t0) / n * 1e6  # us
+
+
+# --- Table I: accuracy & complexity vs bit-width ---------------------------
+
+def table1_accuracy(steps: int = 120, train: bool = True):
+    """Closed-form complexity columns (exact) + synthetic-SVHN accuracy
+    ordering across the paper's W:I configs."""
+    from repro.core.quant import PAPER_CONFIGS
+    from repro.data.synthetic import svhn_like
+    from repro.models.cnn import cnn_forward, cnn_loss, init_cnn, svhn_cnn_spec
+    from repro.train.optimizer import OptConfig, apply_updates, init_opt_state
+
+    rows = []
+    spec = svhn_cnn_spec(8)
+    for name, q in PAPER_CONFIGS.items():
+        row = dict(config=name, w=q.w_bits, i=q.a_bits,
+                   complexity_inference=q.inference_complexity
+                   if q.w_bits < 32 else 0,
+                   complexity_training=q.training_complexity
+                   if q.w_bits < 32 else 0)
+        if train:
+            params, _ = init_cnn(jax.random.PRNGKey(0), spec)
+            ocfg = OptConfig(lr=3e-3, warmup_steps=10, total_steps=steps)
+            ost = init_opt_state(params, ocfg)
+
+            @jax.jit
+            def step(params, ost, batch):
+                (loss, m), g = jax.value_and_grad(
+                    lambda p: cnn_loss(p, batch, spec, q),
+                    has_aux=True)(params)
+                params, ost, _ = apply_updates(params, g, ost, ocfg)
+                return params, ost, m
+
+            for i in range(steps):
+                x, y = svhn_like(32, seed=1000 + i)
+                params, ost, m = step(params, ost, dict(
+                    image=jnp.asarray(x), label=jnp.asarray(y)))
+            x, y = svhn_like(512, seed=77)
+            logits = cnn_forward(params, jnp.asarray(x), spec, q, "train")
+            row["test_error_pct"] = round(
+                100 * (1 - float(jnp.mean(jnp.argmax(logits, -1) ==
+                                          jnp.asarray(y)))), 2)
+        rows.append(row)
+    return rows
+
+
+# --- Fig. 8: storage --------------------------------------------------------
+
+def fig8_storage():
+    from repro.core.quant import model_storage_bits
+    from repro.models.cnn import (alexnet_spec, count_acts, count_params,
+                                  svhn_cnn_spec)
+    rows = []
+    spec = svhn_cnn_spec(20)
+    p, a = count_params(spec), count_acts(spec, 40)
+    base = model_storage_bits(p, a, 32, 32)
+    for (w, i) in [(32, 32), (1, 1), (1, 4), (1, 8), (2, 2)]:
+        bits = model_storage_bits(p, a, w, i)
+        rows.append(dict(model="svhn_cnn", w=w, i=i, mbytes=round(bits / 8e6, 2),
+                         reduction_vs_fp32=round(base / bits, 1)))
+    ap_, aa = count_params(alexnet_spec()), count_acts(alexnet_spec(), 224)
+    for (w, i) in [(64, 64), (32, 32), (1, 1)]:
+        bits = model_storage_bits(ap_, aa, w, i)
+        rows.append(dict(model="alexnet", w=w, i=i, mbytes=round(bits / 8e6, 1),
+                         reduction_vs_fp32=round(
+                             model_storage_bits(ap_, aa, 32, 32) / bits, 1)))
+    return rows
+
+
+# --- Fig. 9 / Fig. 10 / Table II: energy & throughput ----------------------
+
+def fig9_energy():
+    from repro.pim import accelsim as A
+    out = []
+    for (w, i) in [(1, 1), (1, 4), (1, 8), (2, 2)]:
+        for design in ("proposed", "imce", "reram", "asic"):
+            r = A.simulate(design, "imagenet", i, w)
+            out.append(dict(design=design, w=w, i=i,
+                            energy_uj=round(r["energy_uj"], 1),
+                            gops_per_w=round(r["gops_per_w"], 1),
+                            eff_per_mm2=round(r["eff_per_mm2"], 2)))
+    return out
+
+
+def fig10_performance():
+    from repro.pim import accelsim as A
+    out = []
+    for design in ("proposed", "imce", "reram", "asic"):
+        r = A.simulate(design, "imagenet", 1, 1)
+        out.append(dict(design=design, fps=round(r["fps"], 1),
+                        fps_per_mm2=round(r["fps_per_mm2"], 2),
+                        latency_us=round(r["latency_us"], 1)))
+    return out
+
+
+def table2_energy_area():
+    from repro.pim import accelsim as A
+    t2 = A.table2()
+    rows = []
+    for d, cols in t2.items():
+        for ds, v in cols.items():
+            paper_e, paper_a = A.TABLE2[d][ds]
+            rows.append(dict(design=d, dataset=ds,
+                             energy_uj=round(v["energy_uj"], 2),
+                             paper_energy_uj=paper_e,
+                             area_mm2=v["area_mm2"], paper_area_mm2=paper_a))
+    return rows
+
+
+# --- Intermittency (Fig. 7 story) -------------------------------------------
+
+def intermittency_study():
+    from repro.pim.intermittent import sweep_checkpoint_period
+    rows = []
+    for mtbf in (50.0, 500.0, 5000.0):
+        res = sweep_checkpoint_period(mtbf_us=mtbf)
+        for period, r in res.items():
+            rows.append(dict(mtbf_us=mtbf, checkpoint_period=period,
+                             completed=r["completed_frames"],
+                             efficiency=round(r["efficiency"], 3),
+                             failures=r["failures"]))
+    return rows
+
+
+# --- Kernel microbenchmarks (CPU interpret timings; structural only) --------
+
+def kernel_bench():
+    from repro.core.quant import activation_levels, weight_levels
+    from repro.kernels import ops
+    rows = []
+    a = jax.random.uniform(jax.random.PRNGKey(0), (256, 1024))
+    w = jax.random.normal(jax.random.PRNGKey(1), (1024, 256))
+    al, _ = activation_levels(a, 4)
+    wl, _, _ = weight_levels(w, 1)
+    for name, fn in [
+        ("bitgemm_mxu_w1a4", lambda: ops.bitgemm_mxu(al, wl, 4, 1)),
+        ("bitgemm_faithful_w1a4", lambda: ops.bitgemm_faithful(al, wl, 4, 1)),
+        ("quantize_pack_a4", lambda: ops.quantize_pack(a, 4)),
+    ]:
+        us = _time(lambda: jax.block_until_ready(fn()), n=3)
+        rows.append(dict(kernel=name, us_per_call=round(us, 1)))
+    return rows

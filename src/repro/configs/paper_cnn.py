@@ -1,0 +1,14 @@
+"""The paper's own models: SVHN bitwise CNN + binary AlexNet.
+
+Not an LM ArchConfig — exposed for the CNN benchmarks/examples; the
+channel width default is chosen so the SVHN model costs ~80 MFLOPs per
+40x40 image, matching the paper's \u00a7III-A claim.
+"""
+from repro.core.quant import PAPER_CONFIGS, W1A4
+from repro.models.cnn import alexnet_spec, svhn_cnn_spec
+
+SVHN_CHANNELS = 20           # ~80 MFLOPs / 40x40 image (see bench)
+SVHN_SPEC = svhn_cnn_spec(SVHN_CHANNELS)
+ALEXNET_SPEC = alexnet_spec()
+DEFAULT_QUANT = W1A4
+QUANTS = PAPER_CONFIGS

@@ -1,0 +1,20 @@
+# The paper's primary contribution: DoReFa quantization + AND-Accumulation
+# bit-wise GEMM/conv engine + compressor/NV-FA models. Sibling subpackages
+# hold the substrates (models/, train/, distributed/, pim/, ...).
+from .quant import (
+    QuantConfig,
+    PAPER_CONFIGS,
+    FP32,
+    W1A1,
+    W1A4,
+    W1A8,
+    W2A2,
+    quantize_weight,
+    quantize_activation,
+    quantize_gradient,
+    weight_levels,
+    activation_levels,
+)
+from .and_accum import bitgemm, quant_dense_forward, reference_float
+from .conv_lowering import quant_conv2d, conv2d_float, im2col
+from . import bitplane, compressor

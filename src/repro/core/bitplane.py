@@ -1,0 +1,87 @@
+"""Bit-plane decomposition & uint32 lane packing (paper Fig. 3).
+
+The paper stores ``C_m(I)`` / ``C_n(W)`` — the m-th/n-th bit of every
+element — as physical SOT-MRAM sub-array rows so that one row-parallel AND
+computes all products of one plane pair.  The TPU analogue keeps each plane
+packed 32 bits per ``uint32`` lane along the contraction axis: one VPU AND
+processes 32 "cells" per lane per cycle, and ``lax.population_count``
+replaces the sense-amp + compressor readout.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+LANE = 32  # bits packed per uint32 word
+
+
+def decompose(levels: jax.Array, bits: int) -> jax.Array:
+    """Integer levels -> bit planes, shape (bits, *levels.shape), {0,1} int32.
+
+    plane[b] == C_b(levels): the b-th significance bit of every element.
+    """
+    levels = levels.astype(jnp.int32)
+    shifts = jnp.arange(bits, dtype=jnp.int32).reshape((bits,) + (1,) * levels.ndim)
+    return (jax.lax.shift_right_logical(levels[None], shifts) & 1).astype(jnp.int32)
+
+
+def compose(planes: jax.Array) -> jax.Array:
+    """Inverse of :func:`decompose` — planes (bits, ...) -> integer levels."""
+    bits = planes.shape[0]
+    weights = (jnp.int32(1) << jnp.arange(bits, dtype=jnp.int32)).reshape(
+        (bits,) + (1,) * (planes.ndim - 1)
+    )
+    return jnp.sum(planes.astype(jnp.int32) * weights, axis=0)
+
+
+def pad_to_lane(x: jax.Array, axis: int = -1) -> jax.Array:
+    """Zero-pad ``axis`` to a multiple of 32 (zeros AND to 0: exact)."""
+    k = x.shape[axis]
+    pad = (-k) % LANE
+    if pad == 0:
+        return x
+    cfg = [(0, 0)] * x.ndim
+    cfg[axis if axis >= 0 else x.ndim + axis] = (0, pad)
+    return jnp.pad(x, cfg)
+
+
+def pack_bits(plane: jax.Array, axis: int = -1) -> jax.Array:
+    """Pack a {0,1} plane 32-per-word along ``axis`` -> uint32.
+
+    Shape (..., K, ...) -> (..., K/32, ...). K must be a multiple of 32
+    (use :func:`pad_to_lane` first).
+    """
+    axis = axis if axis >= 0 else plane.ndim + axis
+    k = plane.shape[axis]
+    assert k % LANE == 0, f"K={k} not a multiple of {LANE}"
+    new_shape = plane.shape[:axis] + (k // LANE, LANE) + plane.shape[axis + 1 :]
+    x = plane.astype(jnp.uint32).reshape(new_shape)
+    weights = (jnp.uint32(1) << jnp.arange(LANE, dtype=jnp.uint32)).reshape(
+        (1,) * (axis + 1) + (LANE,) + (1,) * (plane.ndim - axis - 1)
+    )
+    return jnp.sum(x * weights, axis=axis + 1, dtype=jnp.uint32)
+
+
+def unpack_bits(packed: jax.Array, axis: int = -1, k: int | None = None) -> jax.Array:
+    """Inverse of :func:`pack_bits`; optionally truncate to original K."""
+    axis = axis if axis >= 0 else packed.ndim + axis
+    shifts = jnp.arange(LANE, dtype=jnp.uint32).reshape(
+        (1,) * (axis + 1) + (LANE,) + (1,) * (packed.ndim - axis - 1)
+    )
+    bits = (jax.lax.shift_right_logical(jnp.expand_dims(packed, axis + 1), shifts) & 1)
+    out_shape = packed.shape[:axis] + (packed.shape[axis] * LANE,) + packed.shape[axis + 1 :]
+    out = bits.reshape(out_shape).astype(jnp.int32)
+    if k is not None:
+        out = jax.lax.slice_in_dim(out, 0, k, axis=axis)
+    return out
+
+
+def popcount(x: jax.Array) -> jax.Array:
+    """Population count of uint32 words -> int32 (the paper's CMP unit)."""
+    return jax.lax.population_count(x).astype(jnp.int32)
+
+
+def decompose_packed(levels: jax.Array, bits: int, axis: int = -1) -> jax.Array:
+    """levels -> (bits, ...) planes packed uint32 along ``axis`` (padded)."""
+    planes = decompose(pad_to_lane(levels, axis), bits)
+    return pack_bits(planes, axis=(axis if axis < 0 else axis + 1))

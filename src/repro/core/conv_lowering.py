@@ -1,0 +1,67 @@
+"""Lower 2-D convolution onto the AND-Accumulation GEMM (paper §II-A).
+
+The paper maps a convolution kernel sweep onto sub-array rows; the GEMM
+identity behind that mapping is im2col:  conv(I, W) == patches(I) @ W' with
+patches (B*OH*OW, kh*kw*Cin) and W' (kh*kw*Cin, Cout).  We reuse the same
+identity so every conv layer runs on the bit-wise engine.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .and_accum import quant_dense_forward
+
+
+def im2col(x: jax.Array, kh: int, kw: int, stride: int = 1, padding: str = "SAME"):
+    """x (B,H,W,C) -> patches (B,OH,OW,kh*kw*C)."""
+    b, h, w, c = x.shape
+    if padding == "SAME":
+        oh, ow = -(-h // stride), -(-w // stride)
+        ph = max((oh - 1) * stride + kh - h, 0)
+        pw = max((ow - 1) * stride + kw - w, 0)
+        x = jnp.pad(x, ((0, 0), (ph // 2, ph - ph // 2), (pw // 2, pw - pw // 2), (0, 0)))
+    else:
+        oh, ow = (h - kh) // stride + 1, (w - kw) // stride + 1
+    patches = jax.lax.conv_general_dilated_patches(
+        x.transpose(0, 3, 1, 2),  # NCHW
+        filter_shape=(kh, kw),
+        window_strides=(stride, stride),
+        padding="VALID",
+    )  # (B, C*kh*kw, OH, OW)
+    patches = patches.transpose(0, 2, 3, 1)  # (B,OH,OW,C*kh*kw)
+    return patches
+
+
+@partial(jax.jit, static_argnames=("stride", "padding", "a_bits", "w_bits", "engine"))
+def quant_conv2d(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    stride: int = 1,
+    padding: str = "SAME",
+    a_bits: int = 4,
+    w_bits: int = 1,
+    engine: str = "int8",
+) -> jax.Array:
+    """Bit-wise conv. x (B,H,W,Cin) in [0,1]; w (kh,kw,Cin,Cout) float."""
+    kh, kw, cin, cout = w.shape
+    patches = im2col(x, kh, kw, stride, padding)
+    b, oh, ow, kdim = patches.shape
+    # conv_general_dilated_patches emits channel-major (C, kh, kw) features;
+    # align the weight layout to match before flattening to the GEMM axis.
+    w2 = w.transpose(2, 0, 1, 3).reshape(cin * kh * kw, cout)
+    out = quant_dense_forward(
+        patches.reshape(-1, kdim), w2, a_bits=a_bits, w_bits=w_bits, engine=engine
+    )
+    return out.reshape(b, oh, ow, cout)
+
+
+def conv2d_float(x, w, *, stride: int = 1, padding: str = "SAME"):
+    """fp oracle conv for the lowering tests (and fp first/last layers)."""
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )

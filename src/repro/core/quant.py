@@ -1,0 +1,205 @@
+"""DoReFa-style low-bitwidth quantizers (paper §II, refs [2]).
+
+The paper quantizes weights/activations to {1,2,4,8}-bit with 8-bit
+gradients, keeping first/last layers full precision. We implement the
+DoReFa forms with straight-through estimators plus the *integer-level*
+views (`levels`, `scale`, `zero_point`) consumed by the AND-Accumulation
+engine in :mod:`repro.core.and_accum`.
+
+Closed-form computation complexity (paper Table I, cols 3-4):
+  inference = w_bits * a_bits          (bit-plane pairs per MAC)
+  training  = w_bits * a_bits + w_bits * g_bits
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """Bit-width configuration, e.g. the paper's W:I = 1:4 with 8-bit grads."""
+
+    w_bits: int = 1
+    a_bits: int = 4
+    g_bits: int = 8
+    # Paper (and DoReFa / XNOR-Net) keep first & last layers full precision.
+    first_last_fp: bool = True
+    # Engine selection: 'planes' (paper-faithful AND+popcount),
+    # 'packed' (uint32-packed AND+popcount), 'int8' (MXU-mapped, beyond-paper),
+    # 'fp' (no bitwise engine; quantize-dequantize only).
+    engine: str = "int8"
+
+    @property
+    def inference_complexity(self) -> int:
+        return self.w_bits * self.a_bits
+
+    @property
+    def training_complexity(self) -> int:
+        return self.w_bits * self.a_bits + self.w_bits * self.g_bits
+
+    def tag(self) -> str:
+        return f"w{self.w_bits}a{self.a_bits}g{self.g_bits}"
+
+
+FP32 = QuantConfig(w_bits=32, a_bits=32, g_bits=32, engine="fp")
+# The paper's four evaluated points (Table I).
+W1A1 = QuantConfig(1, 1, 8)
+W1A4 = QuantConfig(1, 4, 8)
+W1A8 = QuantConfig(1, 8, 8)
+W2A2 = QuantConfig(2, 2, 8)
+PAPER_CONFIGS = {"w32a32": FP32, "w1a1": W1A1, "w1a4": W1A4, "w1a8": W1A8, "w2a2": W2A2}
+
+
+def _ste(x: jax.Array, q: jax.Array) -> jax.Array:
+    """Straight-through estimator: forward q, backward identity."""
+    return x + jax.lax.stop_gradient(q - x)
+
+
+def quantize_k(x: jax.Array, bits: int) -> jax.Array:
+    """DoReFa quantize_k: x in [0,1] -> k-bit levels in [0,1] (STE)."""
+    n = (1 << bits) - 1
+    q = jnp.round(x * n) / n
+    return _ste(x, q)
+
+
+# ---------------------------------------------------------------------------
+# Weights
+# ---------------------------------------------------------------------------
+
+def quantize_weight(w: jax.Array, bits: int) -> jax.Array:
+    """DoReFa weight quantizer (float output, STE).
+
+    1-bit:  sign(w) * E[|w|]            (XNOR-Net style scaled binarization)
+    k-bit:  2 * quantize_k(tanh(w) / (2 max|tanh(w)|) + 1/2) - 1
+    """
+    if bits >= 32:
+        return w
+    if bits == 1:
+        alpha = jnp.mean(jnp.abs(w))
+        q = jnp.where(w >= 0, alpha, -alpha)
+        return _ste(w, q)
+    t = jnp.tanh(w)
+    t = t / (2.0 * jnp.max(jnp.abs(t)) + 1e-12) + 0.5
+    return 2.0 * quantize_k(t, bits) - 1.0
+
+
+def weight_levels(w: jax.Array, bits: int) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Integer-level view of the quantized weight: w_q = scale*(levels - zp).
+
+    levels is uint in [0, 2^bits - 1]; gradients do not flow through this
+    view (it feeds the integer engine; STE is applied by the caller on the
+    float view).
+    """
+    n = (1 << bits) - 1
+    if bits == 1:
+        alpha = jnp.mean(jnp.abs(w))
+        levels = (w >= 0).astype(jnp.int32)  # {0,1}
+        scale = 2.0 * alpha
+        zp = 0.5  # w_q = 2a*(b - 1/2) = a*sign
+        return levels, scale, jnp.asarray(zp, w.dtype)
+    t = jnp.tanh(w)
+    t = t / (2.0 * jnp.max(jnp.abs(t)) + 1e-12) + 0.5  # in [0,1]
+    levels = jnp.clip(jnp.round(t * n), 0, n).astype(jnp.int32)
+    # w_q = 2*levels/n - 1 = (2/n)*(levels - n/2)
+    scale = jnp.asarray(2.0 / n, w.dtype)
+    zp = jnp.asarray(n / 2.0, w.dtype)
+    return levels, scale, zp
+
+
+# ---------------------------------------------------------------------------
+# Activations
+# ---------------------------------------------------------------------------
+
+def quantize_activation(a: jax.Array, bits: int) -> jax.Array:
+    """DoReFa activation quantizer: clip to [0,1] then k-bit (STE)."""
+    if bits >= 32:
+        return a
+    return quantize_k(jnp.clip(a, 0.0, 1.0), bits)
+
+
+def activation_levels(a: jax.Array, bits: int) -> tuple[jax.Array, jax.Array]:
+    """Integer-level view: a_q = levels / (2^bits - 1), levels uint."""
+    n = (1 << bits) - 1
+    levels = jnp.clip(jnp.round(jnp.clip(a, 0.0, 1.0) * n), 0, n).astype(jnp.int32)
+    return levels, jnp.asarray(1.0 / n, a.dtype)
+
+
+def activation_levels_signed(a: jax.Array, bits: int):
+    """Affine (signed) integer-level view for transformer activations.
+
+    The paper's CNN activations are bounded [0,1] (DoReFa); transformer
+    activations are signed, so we use the affine form a_q = s*(levels - z)
+    with z = 2^(b-1) and dynamic per-tensor absmax scaling.  The unsigned
+    bit-plane AND-Accumulation engine is unchanged — signedness is a
+    zero-point correction handled by one extra reduction (DESIGN.md §4).
+
+    Returns (levels uint in [0, 2^b-1], scale, zero_point).
+    """
+    n = (1 << bits) - 1
+    z = float(1 << (bits - 1))
+    s = jnp.max(jnp.abs(a)) / z + 1e-12
+    levels = jnp.clip(jnp.round(a / s) + z, 0, n).astype(jnp.int32)
+    return levels, s.astype(a.dtype), jnp.asarray(z, a.dtype)
+
+
+def fake_quant_act_signed(a: jax.Array, bits: int) -> jax.Array:
+    """STE float view of :func:`activation_levels_signed`."""
+    if bits >= 32:
+        return a
+    n = (1 << bits) - 1
+    z = float(1 << (bits - 1))
+    s = jax.lax.stop_gradient(jnp.max(jnp.abs(a))) / z + 1e-12
+    q = (jnp.clip(jnp.round(a / s) + z, 0, n) - z) * s
+    return _ste(a, q)
+
+
+# ---------------------------------------------------------------------------
+# Gradients (DoReFa Eq. 12: stochastic k-bit gradient quantization)
+# ---------------------------------------------------------------------------
+
+@partial(jax.custom_vjp, nondiff_argnums=(1,))
+def quantize_gradient(x: jax.Array, bits: int, key: Optional[jax.Array] = None):
+    """Identity forward; backward quantizes the incoming gradient to k bits."""
+    return x
+
+
+def _qg_fwd(x, bits, key=None):
+    return x, key
+
+
+def _qg_bwd(bits, key, g):
+    if bits >= 32:
+        return (g, None)
+    n = (1 << bits) - 1
+    mx = 2.0 * jnp.max(jnp.abs(g)) + 1e-12
+    gn = g / mx + 0.5  # in [0,1]
+    if key is not None:
+        noise = (jax.random.uniform(key, g.shape, g.dtype) - 0.5) / n
+        gn = gn + noise
+    q = jnp.clip(jnp.round(gn * n), 0, n) / n
+    return (mx * (q - 0.5), None)
+
+
+quantize_gradient.defvjp(_qg_fwd, _qg_bwd)
+
+
+def fake_quant_dense_weight(w: jax.Array, cfg: QuantConfig, is_first_last: bool = False):
+    if cfg.engine == "fp" or (is_first_last and cfg.first_last_fp):
+        return w
+    return quantize_weight(w, cfg.w_bits)
+
+
+def fake_quant_act(a: jax.Array, cfg: QuantConfig, is_first_last: bool = False):
+    if cfg.engine == "fp" or (is_first_last and cfg.first_last_fp):
+        return a
+    return quantize_activation(a, cfg.a_bits)
+
+
+def model_storage_bits(n_params: int, n_acts: int, w_bits: int, a_bits: int) -> int:
+    """Fig. 8 storage model: parameter bits + activation buffer bits."""
+    return n_params * w_bits + n_acts * a_bits

@@ -1,0 +1,65 @@
+"""Sharded, prefetching host data pipeline.
+
+Deterministic addressing is the backbone of both fault tolerance and
+straggler mitigation (train/elastic.py): every batch is a pure function of
+(step, micro, host), so restarts replay identically and any host can
+compute any other host's shard.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Callable, Iterator, Optional
+
+import jax
+import numpy as np
+
+
+class Pipeline:
+    def __init__(self, batch_fn: Callable[[int, int], Any], *,
+                 accum_steps: int = 1, prefetch: int = 2,
+                 host_index: Optional[int] = None, n_hosts: Optional[int] = None):
+        """batch_fn(step, micro) -> GLOBAL batch dict of np arrays; the
+        pipeline slices this host's shard and prefetches ahead."""
+        self.batch_fn = batch_fn
+        self.accum = accum_steps
+        self.host = jax.process_index() if host_index is None else host_index
+        self.n_hosts = jax.process_count() if n_hosts is None else n_hosts
+        self.prefetch = prefetch
+        self._q: queue.Queue = queue.Queue(maxsize=prefetch)
+        self._thread: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+        self._cursor = 0
+
+    def _shard(self, batch):
+        def slc(x):
+            per = x.shape[0] // self.n_hosts
+            return x[self.host * per: (self.host + 1) * per]
+        return {k: slc(v) for k, v in batch.items()}
+
+    def _producer(self, start_step: int):
+        step, micro = start_step, 0
+        while not self._stop.is_set():
+            item = self._shard(self.batch_fn(step, micro))
+            self._q.put(((step, micro), item))
+            micro += 1
+            if micro == self.accum:
+                micro, step = 0, step + 1
+
+    def start(self, start_step: int = 0):
+        self._stop.clear()
+        self._thread = threading.Thread(
+            target=self._producer, args=(start_step,), daemon=True)
+        self._thread.start()
+        return self
+
+    def __next__(self):
+        return self._q.get()
+
+    def stop(self):
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass

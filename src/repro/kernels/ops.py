@@ -1,0 +1,82 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On CPU (this container) kernels run with ``interpret=True`` for
+correctness validation; on TPU they compile natively. The wrappers also
+own layout plumbing: bit-plane packing for the faithful kernel and
+nibble-splitting for >7-bit operands on the MXU kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitplane
+from repro.core.and_accum import _nibble_split
+from .bitgemm import bitgemm_packed_pallas
+from .bitgemm_mxu import int8_matmul_pallas
+from .quantpack import quantize_pack_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def bitgemm_faithful(a_lv: jax.Array, w_lv: jax.Array, a_bits: int, w_bits: int,
+                     interpret: bool | None = None) -> jax.Array:
+    """Paper-faithful kernel path: pack planes, AND+popcount on VPU tiles."""
+    interpret = _interpret() if interpret is None else interpret
+    a_planes = bitplane.decompose_packed(a_lv, a_bits, axis=-1)      # (m, M, Kw)
+    w_planes = bitplane.decompose_packed(w_lv.T, w_bits, axis=-1)    # (n, N, Kw)
+    return bitgemm_packed_pallas(
+        a_planes, w_planes, a_bits=a_bits, w_bits=w_bits, interpret=interpret
+    )
+
+
+def bitgemm_mxu(a_lv: jax.Array, w_lv: jax.Array, a_bits: int, w_bits: int,
+                interpret: bool | None = None) -> jax.Array:
+    """Optimized kernel path: folded int8 MXU matmul (nibble-split >7b)."""
+    interpret = _interpret() if interpret is None else interpret
+    out = jnp.zeros((a_lv.shape[0], w_lv.shape[1]), jnp.int32)
+    for ga, sa in _nibble_split(a_lv, a_bits):
+        for gw, sw in _nibble_split(w_lv, w_bits):
+            d = int8_matmul_pallas(
+                ga.astype(jnp.int8), gw.astype(jnp.int8), interpret=interpret
+            )
+            out = out + (d << (sa + sw))
+    return out
+
+
+def quantize_pack(a: jax.Array, bits: int, interpret: bool | None = None):
+    """Fused DoReFa quantize + pack (kernel); returns (levels, planes)."""
+    interpret = _interpret() if interpret is None else interpret
+    return quantize_pack_pallas(a, bits=bits, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("a_bits", "w_bits", "path"))
+def quant_dense_kernel(a: jax.Array, w: jax.Array, a_bits: int, w_bits: int,
+                       path: str = "mxu") -> jax.Array:
+    """End-to-end quantized dense on kernels: quantize+pack -> bitgemm -> dequant.
+
+    Mirrors :func:`repro.core.and_accum.quant_dense_forward` but exercises
+    the Pallas pipeline. a (..., K) in R; w (K, N).
+    """
+    from repro.core.quant import weight_levels
+
+    lead = a.shape[:-1]
+    a2 = a.reshape((-1, a.shape[-1]))
+    a_lv, packed = quantize_pack(a2, a_bits)
+    s_a = jnp.asarray(1.0 / ((1 << a_bits) - 1), a.dtype)
+    w_lv, s_w, z_w = weight_levels(w, w_bits)
+    if path == "faithful":
+        w_planes = bitplane.decompose_packed(w_lv.T, w_bits, axis=-1)
+        acc = bitgemm_packed_pallas(
+            packed, w_planes, a_bits=a_bits, w_bits=w_bits, interpret=_interpret()
+        )
+    else:
+        acc = bitgemm_mxu(a_lv, w_lv, a_bits, w_bits)
+    acc = acc.astype(a.dtype)
+    rowsum = jnp.sum(a_lv, axis=-1, dtype=jnp.int32).astype(a.dtype)
+    out = (s_a * s_w) * acc - (s_a * s_w * z_w) * rowsum[:, None]
+    return out.reshape(lead + (w.shape[-1],))

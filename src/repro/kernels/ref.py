@@ -1,0 +1,36 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth for the shape/dtype sweep tests: each kernel
+must match its oracle exactly (integer ops) or to float tolerance (the
+fused quantize kernel's float scales).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitplane
+from repro.core.and_accum import bitgemm_planes
+
+
+def bitgemm_ref(a_lv: jax.Array, w_lv: jax.Array, a_bits: int, w_bits: int) -> jax.Array:
+    """Oracle for both bitgemm kernels: exact Eq. (1) on integer levels."""
+    return bitgemm_planes(a_lv.astype(jnp.int32), w_lv.astype(jnp.int32), a_bits, w_bits)
+
+
+def quantpack_ref(a: jax.Array, bits: int):
+    """Oracle for the fused quantize+pack kernel.
+
+    a (M, K) float in R -> (levels (M,K) int32, packed (bits, M, ceil(K/32)) uint32)
+    """
+    n = (1 << bits) - 1
+    levels = jnp.clip(jnp.round(jnp.clip(a, 0.0, 1.0) * n), 0, n).astype(jnp.int32)
+    packed = bitplane.decompose_packed(levels, bits, axis=-1)
+    return levels, packed
+
+
+def matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Oracle for the generic MXU matmul kernel (int8 -> int32 or bf16 -> f32)."""
+    if jnp.issubdtype(a.dtype, jnp.integer):
+        return jnp.dot(a, b, preferred_element_type=jnp.int32)
+    return jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32))

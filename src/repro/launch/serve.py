@@ -1,0 +1,79 @@
+"""Production serving driver: batched prefill + decode with KV cache.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch phi3-mini-3.8b --smoke \
+      --batch 4 --prompt-len 16 --new-tokens 16 [--quant w1a8]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SINGLE, get_config
+from repro.core.quant import PAPER_CONFIGS
+from repro.data.synthetic import lm_batch
+from repro.models import transformer as T
+
+
+def widen_cache(cache, prompt_len: int, slots: int):
+    """Grow a prefill cache to the decode horizon (position-preserving)."""
+    cache = jax.tree.map(
+        lambda t: jnp.pad(t, [(0, 0), (0, 0), (0, slots - t.shape[2])]
+                          + [(0, 0)] * (t.ndim - 3))
+        if t.ndim >= 3 and t.shape[2] == prompt_len else t, cache)
+    for kind in cache:
+        if "pos" in cache[kind]:
+            cache[kind]["pos"] = jnp.where(
+                jnp.arange(slots)[None, None, :] < prompt_len,
+                cache[kind]["pos"], -1)
+    return cache
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="phi3-mini-3.8b")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--quant", default=None, choices=list(PAPER_CONFIGS))
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.smoke()
+    if args.quant:
+        cfg = dataclasses.replace(cfg, quant=PAPER_CONFIGS[args.quant])
+    qmode = "serve" if args.quant and args.quant != "w32a32" else "train"
+
+    params, _ = T.init_lm(jax.random.PRNGKey(0), cfg, SINGLE)
+    B, S_p, S_d = args.batch, args.prompt_len, args.new_tokens
+    prompts = jnp.asarray(
+        lm_batch(0, 0, batch=B, seq=S_p, vocab=cfg.vocab)["tokens"])
+
+    t0 = time.perf_counter()
+    logits, cache = T.prefill(params, cfg, SINGLE, tokens=prompts, qmode=qmode)
+    cache = widen_cache(cache, S_p, S_p + S_d)
+    tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+    step = jax.jit(
+        lambda c, t, p: T.decode_step(params, c, t, p, cfg, SINGLE, qmode=qmode))
+    toks = [tok]
+    for t in range(S_d - 1):
+        lg, cache = step(cache, tok, S_p + t)
+        tok = jnp.argmax(lg[:, -1:], -1).astype(jnp.int32)
+        toks.append(tok)
+    gen = jnp.concatenate(toks, axis=1)
+    jax.block_until_ready(gen)
+    dt = time.perf_counter() - t0
+    print(f"arch={cfg.name} quant={args.quant or 'fp'} engine={qmode}")
+    print(f"generated {B}x{S_d} tokens in {dt:.2f}s "
+          f"({B * S_d / dt:.1f} tok/s incl. compile)")
+    for b in range(min(B, 2)):
+        print(f"  sample[{b}]: {list(map(int, gen[b][:12]))}")
+
+
+if __name__ == "__main__":
+    main()

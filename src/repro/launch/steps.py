@@ -1,0 +1,179 @@
+"""Step builders + abstract input specs for every (arch x shape) cell.
+
+``input_specs`` returns ShapeDtypeStruct stand-ins (weak-type-correct,
+shardable, zero allocation) for each step kind; ``make_*_step`` return the
+functions that launch/dryrun.py lowers under the production mesh.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeCell, ShardPlan
+from repro.distributed import sharding as shd
+from repro.models import transformer as T
+from repro.train import optimizer as opt
+
+S = jax.ShapeDtypeStruct
+
+
+# ---------------------------------------------------------------------------
+# Abstract params / optimizer / cache
+# ---------------------------------------------------------------------------
+
+def abstract_params(cfg: ArchConfig, plan: ShardPlan):
+    """(params ShapeDtypeStructs, axes) without allocating anything."""
+    box = {}
+
+    def mk():
+        p, a = T.init_lm(jax.random.PRNGKey(0), cfg, plan)
+        box["axes"] = a
+        return p
+
+    params = jax.eval_shape(mk)
+    return params, box["axes"]
+
+
+def abstract_opt(params, opt_cfg: opt.OptConfig, param_axes):
+    state = jax.eval_shape(lambda p: opt.init_opt_state(p, opt_cfg), params)
+    axes = opt.opt_state_axes(param_axes, opt_cfg)
+    return state, axes
+
+
+def abstract_cache(cfg: ArchConfig, plan: ShardPlan, batch: int, max_len: int):
+    cache = jax.eval_shape(
+        lambda: T.init_cache(cfg, plan, batch, max_len, dtype=cfg.compute_dtype))
+    return cache, T.cache_axes(cfg, plan)
+
+
+def batch_specs(cfg: ArchConfig, cell: ShapeCell):
+    """Abstract training/prefill batch for this arch's modality."""
+    B, L = cell.global_batch, cell.seq_len
+    b: dict[str, Any] = {}
+    if cfg.frame_input:
+        b["frame_feats"] = S((B, L, cfg.frame_dim), jnp.float32)
+    else:
+        b["tokens"] = S((B, L), jnp.int32)
+    if cfg.n_patches:
+        b["patch_embeds"] = S((B, cfg.n_patches, cfg.vit_dim), jnp.float32)
+    if cell.kind == "train":
+        b["labels"] = S((B, L), jnp.int32)
+    return b
+
+
+# ---------------------------------------------------------------------------
+# Steps
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ArchConfig, plan: ShardPlan, opt_cfg: opt.OptConfig):
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            T.lm_loss, has_aux=True)(params, batch, cfg, plan)
+        params, opt_state, stats = opt.apply_updates(params, grads, opt_state, opt_cfg)
+        return params, opt_state, {**metrics, **stats}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, plan: ShardPlan, qmode: str = "train"):
+    if not cfg.causal:  # encoder: no KV cache exists; prefill == encode
+        def encode_step(params, batch):
+            logits, _, _ = T.forward(
+                params, cfg, plan, tokens=batch.get("tokens"),
+                frame_feats=batch.get("frame_feats"), mode="train", qmode=qmode)
+            return logits[:, -1, :], {}
+
+        return encode_step
+
+    def prefill_step(params, batch):
+        logits, cache = T.prefill(
+            params, cfg, plan,
+            tokens=batch.get("tokens"),
+            patch_embeds=batch.get("patch_embeds"),
+            frame_feats=batch.get("frame_feats"),
+            qmode=qmode)
+        # return last-position logits only (sampler input); full logits for
+        # a 32k prefill would be O(100GB) of useless output traffic.
+        return logits[:, -1, :], cache
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig, plan: ShardPlan, qmode: str = "train"):
+    def decode_step(params, cache, token, pos):
+        logits, new_cache = T.decode_step(params, cache, token, pos, cfg, plan,
+                                          qmode=qmode)
+        return logits[:, -1, :], new_cache
+
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# Full cell assembly: (step_fn, abstract args, in/out shardings, donate)
+# ---------------------------------------------------------------------------
+
+def build_cell(cfg: ArchConfig, cell: ShapeCell, plan: ShardPlan, mesh,
+               opt_cfg: opt.OptConfig | None = None, qmode: str = "train",
+               prequant: bool = False):
+    """Everything dryrun.py needs to lower one (arch x shape x mesh) cell."""
+    opt_cfg = opt_cfg or opt.OptConfig()
+    params, p_axes = abstract_params(cfg, plan)
+    if prequant and cell.kind != "train":
+        from repro.models.layers import prequantize_axes, prequantize_params
+        params = jax.eval_shape(lambda p: prequantize_params(p, cfg), params)
+        p_axes = prequantize_axes(p_axes, cfg)
+    p_sh = shd.tree_shardings(params, p_axes, plan, mesh, cfg)
+
+    if cell.kind == "train":
+        ostate, o_axes = abstract_opt(params, opt_cfg, p_axes)
+        o_sh = shd.tree_shardings(ostate, o_axes, plan, mesh, cfg)
+        batch = batch_specs(cfg, cell)
+        b_sh = shd.batch_shardings(batch, plan, mesh)
+        fn = make_train_step(cfg, plan, opt_cfg)
+        metrics_sh = jax.tree.map(
+            lambda _: shd.replicated(mesh),
+            jax.eval_shape(fn, params, ostate, batch)[2])
+        return dict(
+            fn=fn, args=(params, ostate, batch),
+            in_shardings=(p_sh, o_sh, b_sh),
+            out_shardings=(p_sh, o_sh, metrics_sh),
+            donate_argnums=(0, 1),
+        )
+
+    if cell.kind == "prefill":
+        batch = batch_specs(cfg, cell)
+        b_sh = shd.batch_shardings(batch, plan, mesh)
+        fn = make_prefill_step(cfg, plan, qmode)
+        logits_s, cache_s = jax.eval_shape(fn, params, batch)
+        c_axes = T.cache_axes(cfg, plan)
+        # prefill emits a cache shaped like its outputs; shard like decode cache
+        c_sh = shd.tree_shardings(cache_s, _match_cache_axes(cache_s, c_axes),
+                                  plan, mesh, cfg)
+        out_sh = (shd.batch_shardings(logits_s, plan, mesh), c_sh)
+        return dict(fn=fn, args=(params, batch), in_shardings=(p_sh, b_sh),
+                    out_shardings=out_sh, donate_argnums=())
+
+    # decode
+    B = cell.global_batch
+    cache, c_axes = abstract_cache(cfg, plan, B, cell.seq_len)
+    c_sh = shd.tree_shardings(cache, _match_cache_axes(cache, c_axes), plan,
+                              mesh, cfg)
+    token = S((B, 1), jnp.int32)
+    pos = S((), jnp.int32)
+    t_sh = shd.batch_shardings(token, plan, mesh)
+    fn = make_decode_step(cfg, plan, qmode)
+    logits_s = jax.eval_shape(fn, params, cache, token, pos)[0]
+    return dict(
+        fn=fn, args=(params, cache, token, pos),
+        in_shardings=(p_sh, c_sh, t_sh, shd.replicated(mesh)),
+        out_shardings=(shd.batch_shardings(logits_s, plan, mesh), c_sh),
+        donate_argnums=(1,),
+    )
+
+
+def _match_cache_axes(cache_tree, cache_axes):
+    """Prune the static axes tree to the kinds present in the cache tree."""
+    return {k: cache_axes[k] for k in cache_tree}

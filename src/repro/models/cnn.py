@@ -1,0 +1,173 @@
+"""The paper's CNN models (§III-A):
+
+* ``svhn_cnn`` — 6 conv + 2 average-pool + 2 FC layers (FC realized as
+  1x1 convolutions, as the paper states), for 40x40 SVHN digits.
+  First and last layers stay full precision (paper follows DoReFa/XNOR).
+* ``alexnet`` — binary-weight AlexNet used for the ImageNet storage /
+  energy rows (Fig. 8b, Table II).
+
+Every quantized conv runs the AND-Accumulation engine via
+:func:`repro.core.conv_lowering.quant_conv2d` (inference/serve mode) or a
+fake-quant STE conv (training mode).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.conv_lowering import conv2d_float, quant_conv2d
+from repro.core.quant import (
+    QuantConfig,
+    quantize_activation,
+    quantize_gradient,
+    quantize_weight,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvSpec:
+    cin: int
+    cout: int
+    k: int = 3
+    stride: int = 1
+    pool: bool = False   # 2x2 average pool after this layer
+    role: str = "mid"    # first | mid | last
+    fc: bool = False     # fully-connected: VALID conv reducing to 1x1
+
+
+def svhn_cnn_spec(channels: int = 64) -> list[ConvSpec]:
+    """6 conv + 2 pool + 2 FC(=1x1 conv) — the paper's SVHN model."""
+    c = channels
+    return [
+        ConvSpec(3, c, 5, role="first"),
+        ConvSpec(c, c, 3),
+        ConvSpec(c, 2 * c, 3, pool=True),       # avg-pool #1
+        ConvSpec(2 * c, 2 * c, 3),
+        ConvSpec(2 * c, 4 * c, 3, pool=True),   # avg-pool #2
+        ConvSpec(4 * c, 4 * c, 3),
+        ConvSpec(4 * c, 8 * c, 1),              # FC-equivalent 1
+        ConvSpec(8 * c, 10, 1, role="last"),    # FC-equivalent 2 (10 classes)
+    ]
+
+
+def alexnet_spec() -> list[ConvSpec]:
+    """AlexNet conv/FC stack (FCs as convs) for the ImageNet rows."""
+    return [
+        ConvSpec(3, 96, 11, stride=4, pool=True, role="first"),
+        ConvSpec(96, 256, 5, pool=True),
+        ConvSpec(256, 384, 3),
+        ConvSpec(384, 384, 3),
+        ConvSpec(384, 256, 3, pool=True),
+        ConvSpec(256, 4096, 6, fc=True),                 # FC6
+        ConvSpec(4096, 4096, 1, fc=True),                # FC7
+        ConvSpec(4096, 1000, 1, fc=True, role="last"),   # FC8
+    ]
+
+
+def init_cnn(key, spec: Sequence[ConvSpec], dtype=jnp.float32):
+    params, axes = [], []
+    keys = jax.random.split(key, len(spec))
+    for k, s in zip(keys, spec):
+        fan_in = s.k * s.k * s.cin
+        w = jax.random.normal(k, (s.k, s.k, s.cin, s.cout), dtype) / math.sqrt(fan_in)
+        b = jnp.zeros((s.cout,), dtype)
+        g = jnp.ones((s.cout,), dtype)  # batch-norm-ish scale (folded form)
+        beta = jnp.zeros((s.cout,), dtype)
+        params.append(dict(w=w, b=b, g=g, beta=beta))
+        axes.append(dict(w=(None, None, None, "mlp"), b=("mlp",), g=("mlp",),
+                         beta=("mlp",)))
+    return params, axes
+
+
+def _norm_act(x, g, beta, quant: QuantConfig, role: str):
+    """Per-channel norm (BN inference form) + bounded activation.
+
+    The bounded ReLU (clip to [0,1]) is exactly DoReFa's activation domain,
+    so quantize_activation is the identity structure the paper assumes.
+    """
+    mu = jnp.mean(x, axis=(0, 1, 2), keepdims=True)
+    var = jnp.var(x, axis=(0, 1, 2), keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + 1e-5) * g + beta
+    x = jnp.clip(x, 0.0, 1.0)
+    if role == "last" or quant.engine == "fp":
+        return x
+    return quantize_activation(x, quant.a_bits)
+
+
+def cnn_forward(params, x, spec: Sequence[ConvSpec], quant: QuantConfig,
+                mode: str = "train", g_key=None):
+    """x (B,H,W,3) in [0,1]. Returns logits (B, n_classes)."""
+    h = x
+    for i, (p, s) in enumerate(zip(params, spec)):
+        pad = "VALID" if (s.fc or s.k == 1) else "SAME"
+        if s.fc and s.k > 1 and h.shape[1] != s.k:
+            # FC over whatever spatial extent remains: pool/crop to k x k
+            h = jax.image.resize(h, (h.shape[0], s.k, s.k, h.shape[3]), "linear")
+        fp_layer = quant.engine == "fp" or (
+            s.role in ("first", "last") and quant.first_last_fp)
+        if fp_layer:
+            h = conv2d_float(h, p["w"], stride=s.stride, padding=pad)
+        elif mode == "serve":
+            h = quant_conv2d(h, p["w"], stride=s.stride, padding=pad,
+                             a_bits=quant.a_bits, w_bits=quant.w_bits,
+                             engine="int8")
+        else:  # fake-quant STE training conv
+            wq = quantize_weight(p["w"], quant.w_bits)
+            hq = h  # already quantized by the previous _norm_act
+            h = conv2d_float(hq, wq, stride=s.stride, padding=pad)
+        if mode == "train" and g_key is not None and not fp_layer:
+            h = quantize_gradient(h, quant.g_bits,
+                                  jax.random.fold_in(g_key, i))
+        h = h + p["b"]
+        if i < len(spec) - 1:
+            h = _norm_act(h, p["g"], p["beta"], quant, s.role)
+        if s.pool:
+            h = jax.lax.reduce_window(
+                h, 0.0, jax.lax.add, (1, 2, 2, 1), (1, 2, 2, 1), "VALID") / 4.0
+    return jnp.mean(h, axis=(1, 2))  # global average -> (B, classes)
+
+
+def cnn_loss(params, batch, spec, quant: QuantConfig, g_key=None):
+    logits = cnn_forward(params, batch["image"], spec, quant, "train", g_key)
+    labels = batch["label"]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    loss = -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))
+    acc = jnp.mean(jnp.argmax(logits, -1) == labels)
+    return loss, dict(loss=loss, acc=acc)
+
+
+def count_params(spec: Sequence[ConvSpec]) -> int:
+    return sum(s.k * s.k * s.cin * s.cout for s in spec)
+
+
+def count_acts(spec: Sequence[ConvSpec], img: int) -> int:
+    """Peak activation element count for the storage model (Fig. 8)."""
+    h = img
+    total = img * img * 3
+    for s in spec:
+        h = max(h // s.stride, 1)
+        total += h * h * s.cout
+        if s.pool:
+            h //= 2
+    return total
+
+
+def count_macs(spec: Sequence[ConvSpec], img: int) -> int:
+    """MAC count per image (the paper's '80 FLOPs' ~ 80 MFLOPs on 40x40)."""
+    h = img
+    total = 0
+    for s in spec:
+        if s.fc:
+            oh = 1
+        else:
+            oh = max(-(-h // s.stride), 1)
+        total += oh * oh * s.k * s.k * s.cin * s.cout
+        h = oh
+        if s.pool:
+            h = max(h // 2, 1)
+    return total

@@ -1,0 +1,496 @@
+"""Shared neural-net layers (pure-JAX pytrees, no flax).
+
+Conventions
+-----------
+* Every ``init_*`` returns ``(params, axes)`` — two parallel pytrees; the
+  axes tree holds tuples of *logical* axis names consumed by
+  ``repro.distributed.sharding`` (e.g. ``("embed", "heads")``).
+* All matmul-bearing layers route through :func:`qdense`, which applies
+  the paper's AND-Accumulation quantized GEMM per the arch's
+  ``QuantConfig`` (fake-quant STE in training, integer engine in
+  serving), or a plain matmul for fp configs.
+* Shapes: activations ``(B, S, d)``; attention heads ``(B, S, H, hd)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.and_accum import quant_dense_forward_signed
+from repro.core.quant import QuantConfig, fake_quant_act_signed, quantize_weight
+
+# ---------------------------------------------------------------------------
+# Param init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, in_dim: int, out_dim: int, axes: tuple, dtype=jnp.float32,
+               scale: float | None = None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(in_dim)
+    w = jax.random.normal(key, (in_dim, out_dim), dtype) * scale
+    return w, axes
+
+
+def norm_init(dim: int, dtype=jnp.float32):
+    return jnp.ones((dim,), dtype), ("embed",)
+
+
+# ---------------------------------------------------------------------------
+# Quantized dense — the paper's technique as a layer primitive
+# ---------------------------------------------------------------------------
+
+def qdense(x: jax.Array, w, quant: QuantConfig, *,
+           role: str = "mid", mode: str = "train") -> jax.Array:
+    """Dense layer running the AND-Accumulation engine when quantized.
+
+    role: 'first'|'mid'|'last' — paper keeps first/last layers fp.
+    mode: 'train' -> fake-quant STE float GEMM (differentiable);
+          'serve' -> integer engine (exact int32 accumulation).
+    w may be a prequantized dict {"q": int8 levels, "s": scale, "z": zp}
+    (see :func:`prequantize_params`) — serve-only, 4x less weight traffic.
+    """
+    if isinstance(w, dict):
+        from repro.core.and_accum import quant_dense_forward_signed_pre
+        return quant_dense_forward_signed_pre(
+            x, w["q"], w["s"], w["z"], quant.a_bits, quant.w_bits,
+            engine="int8", a_scale=_STATIC_ACT_SCALE[0])
+    if quant.engine == "fp" or quant.w_bits >= 32 or (
+        role in ("first", "last") and quant.first_last_fp
+    ):
+        return x @ w.astype(x.dtype)
+    if mode == "serve":
+        lead = x.shape[:-1]
+        x2 = x.reshape((-1, x.shape[-1]))
+        out = quant_dense_forward_signed(
+            x2, w, quant.a_bits, quant.w_bits,
+            engine=quant.engine if quant.engine in ("planes", "packed", "int8") else "int8",
+        )
+        return out.reshape(lead + (w.shape[-1],))
+    aq = fake_quant_act_signed(x, quant.a_bits)
+    wq = quantize_weight(w, quant.w_bits).astype(x.dtype)
+    return aq @ wq
+
+
+PREQUANT_KEYS = {"wq", "wk", "wv", "wo", "w_in", "w_gate", "w_out"}
+# module-level static-activation-scale knob (set by launch/ for serve cells;
+# 0/None = dynamic absmax).  A list so closures observe mutation.
+_STATIC_ACT_SCALE: list = [None]
+
+
+def set_static_act_scale(v):
+    _STATIC_ACT_SCALE[0] = v if v else None
+
+
+def _quantize_leaf_stacked(w, bits: int):
+    """(L, K, N) fp -> per-layer int8 levels + scales (vmapped)."""
+    from repro.core.quant import weight_levels
+
+    def one(wl):
+        lv, s, z = weight_levels(wl, bits)
+        return lv.astype(jnp.int8), s, z
+
+    q, s, z = jax.vmap(one)(w)
+    return {"q": q, "s": s, "z": z}
+
+
+def prequantize_params(params, cfg):
+    """Serve-time transform: store projection weights as int8 levels
+    (the checkpoint-resident analogue of the paper's in-array bit planes)."""
+    out = dict(params)
+    blocks = {}
+    for kind, tree in params["blocks"].items():
+        new = {}
+        for sub, sv in tree.items():
+            if isinstance(sv, dict):
+                new[sub] = {k: (_quantize_leaf_stacked(v, cfg.quant.w_bits)
+                                if k in PREQUANT_KEYS else v)
+                            for k, v in sv.items()}
+            else:
+                new[sub] = sv
+        blocks[kind] = new
+    out["blocks"] = blocks
+    return out
+
+
+def prequantize_axes(axes, cfg):
+    """Axes tree mirroring :func:`prequantize_params`."""
+    out = dict(axes)
+    blocks = {}
+    for kind, tree in axes["blocks"].items():
+        new = {}
+        for sub, sv in tree.items():
+            if isinstance(sv, dict):
+                new[sub] = {k: ({"q": v, "s": ("layers",), "z": ("layers",)}
+                                if k in PREQUANT_KEYS else v)
+                            for k, v in sv.items()}
+            else:
+                new[sub] = sv
+        blocks[kind] = new
+    out["blocks"] = blocks
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Norms & RoPE
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype) * scale.astype(x.dtype)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x (..., S, H, hd), positions (..., S) or (S,) -> rotated x."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., S, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos[..., None, :]  # broadcast over heads
+    sin = sin[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (full + chunked online-softmax paths)
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def _mask(iq, jk, causal: bool, window: Optional[int]):
+    """iq (Sq,), jk (Skv,) absolute positions; jk<0 marks invalid slots."""
+    m = jk[None, :] >= 0
+    if causal:
+        m &= jk[None, :] <= iq[:, None]
+    if window is not None:
+        m &= jk[None, :] > (iq[:, None] - window)
+    return m  # (Sq, Skv)
+
+
+def expand_kv(k, v, n_q_real: int, n_q_padded: int):
+    """GQA: map KV heads onto (possibly TP-padded) query heads.
+
+    Query head j attends kv head j // (H/Hkv); padded q heads (j >= H,
+    zero-masked downstream) reuse kv head Hkv-1.  Explicit materialization
+    keeps the head-axis sharding uniform under GSPMD (a grouped reshape of
+    a TP-sharded head axis would force all-gathers).
+    """
+    hkv = k.shape[2]
+    if hkv == n_q_padded:
+        return k, v
+    g = max(n_q_real // hkv, 1)
+    idx = jnp.minimum(jnp.arange(n_q_padded) // g, hkv - 1)
+    return jnp.take(k, idx, axis=2), jnp.take(v, idx, axis=2)
+
+
+def attn_full(q, k, v, *, causal: bool, window: Optional[int],
+              q_pos, kv_pos, logits_dtype=jnp.float32) -> jax.Array:
+    """q (B,Sq,H,hd); k,v (B,Skv,H,hd) (KV pre-repeated for GQA)."""
+    B, Sq, H, hd = q.shape
+    logits = jnp.einsum("bqhd,bshd->bhqs", q, k,
+                        preferred_element_type=logits_dtype)
+    logits = logits / math.sqrt(hd)
+    m = _mask(q_pos, kv_pos, causal, window)  # (Sq, Skv)
+    logits = jnp.where(m[None, None], logits,
+                       jnp.asarray(NEG_INF, logits.dtype))
+    # softmax in the logits dtype: with bf16_logits the whole S^2 chain
+    # (max/sub/exp/sum/div) stays bf16 — halves every attention temp
+    p = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhqs,bshd->bqhd", p, v)
+    return out
+
+
+def _pick_chunk(n: int, target: int) -> int:
+    """Largest divisor of n that is <= target (handles e.g. 32768+256 vlm
+    sequences where a fixed power-of-two chunk does not divide S)."""
+    best = 1
+    d = 1
+    while d * d <= n:
+        if n % d == 0:
+            for c in (d, n // d):
+                if c <= target and c > best:
+                    best = c
+        d += 1
+    return best
+
+
+def attn_banded(q, k, v, *, window: int, q_pos, kv_pos,
+                logits_dtype=jnp.float32) -> jax.Array:
+    """Local (sliding-window) attention computing ONLY the window band.
+
+    Python loop over q blocks of size `window`; block i attends kv
+    [max(0,(i-1)W) : (i+1)W) — static slices, so the compiled HLO holds
+    exactly the banded work: 2*S*W logits instead of S^2 (16x less for
+    recurrentgemma's W=2048 @ S=32k).  Loop is unrolled (analysis-exact).
+    """
+    B, Sq, H, hd = q.shape
+    W = window
+    nb = -(-Sq // W)
+    outs = []
+    for i in range(nb):
+        q0, q1 = i * W, min((i + 1) * W, Sq)
+        k0 = max(0, (i - 1) * W)
+        k1 = q1
+        qi = jax.lax.slice_in_dim(q, q0, q1, axis=1)
+        ki = jax.lax.slice_in_dim(k, k0, k1, axis=1)
+        vi = jax.lax.slice_in_dim(v, k0, k1, axis=1)
+        outs.append(attn_full(
+            qi, ki, vi, causal=True, window=W,
+            q_pos=q_pos[q0:q1], kv_pos=kv_pos[k0:k1],
+            logits_dtype=logits_dtype))
+    return jnp.concatenate(outs, axis=1)
+
+
+def attn_chunked(q, k, v, *, causal: bool, window: Optional[int],
+                 q_pos, kv_pos, q_chunk: int = 1024, kv_chunk: int = 1024):
+    """Online-softmax attention, O(chunk^2) memory (prefill_32k path).
+
+    Sequential scan over q chunks with an inner scan over kv chunks —
+    the pure-JAX flash-attention dataflow (fully masked chunks are
+    computed-and-zeroed; the §Perf log accounts for the causal 2x).
+    """
+    B, Sq, H, hd = q.shape
+    Skv = k.shape[1]
+    q_chunk = _pick_chunk(Sq, q_chunk)
+    kv_chunk = _pick_chunk(Skv, kv_chunk)
+    Nq, Nk = Sq // q_chunk, Skv // kv_chunk
+    qs = q.reshape(B, Nq, q_chunk, H, hd).transpose(1, 0, 3, 2, 4)
+    ks = k.reshape(B, Nk, kv_chunk, H, hd).transpose(1, 0, 3, 2, 4)
+    vs = v.reshape(B, Nk, kv_chunk, H, hd).transpose(1, 0, 3, 2, 4)
+    qp = q_pos.reshape(Nq, q_chunk)
+    kp = kv_pos.reshape(Nk, kv_chunk)
+    scale = 1.0 / math.sqrt(hd)
+
+    def q_body(_, qc):
+        qi, qpos = qc  # (B,H,Cq,hd), (Cq,)
+
+        def kv_body(carry, kc):
+            m_run, l_run, acc = carry
+            kj, vj, kpos = kc
+            s = jnp.einsum("bhqd,bhsd->bhqs", qi, kj,
+                           preferred_element_type=jnp.float32) * scale
+            msk = _mask(qpos, kpos, causal, window)[None, None]
+            s = jnp.where(msk, s, NEG_INF)
+            m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None]) * msk
+            corr = jnp.exp(m_run - m_new)
+            l_run = l_run * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bhqs,bhsd->bhqd", p.astype(vj.dtype), vj,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_run, acc), None
+
+        init = (
+            jnp.full((B, H, q_chunk), NEG_INF, jnp.float32),
+            jnp.zeros((B, H, q_chunk), jnp.float32),
+            jnp.zeros((B, H, q_chunk, hd), jnp.float32),
+        )
+        (m_run, l_run, acc), _ = jax.lax.scan(kv_body, init, (ks, vs, kp))
+        out = acc / jnp.maximum(l_run, 1e-30)[..., None]
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_body, None, (qs, qp))  # (Nq,B,H,Cq,hd)
+    out = outs.transpose(1, 0, 3, 2, 4).reshape(B, Sq, H, hd)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block (params + forward; zero-masked Q-head padding)
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg, plan) -> tuple[dict, dict]:
+    d, hd = cfg.d_model, cfg.hd
+    Hp = plan.padded_heads(cfg.n_heads)
+    Hkv = cfg.n_kv_heads
+    ks = jax.random.split(key, 5)
+    p, a = {}, {}
+    p["ln"], a["ln"] = norm_init(d, cfg.param_dtype)
+    p["wq"], a["wq"] = dense_init(ks[0], d, Hp * hd, ("embed", "heads"), cfg.param_dtype)
+    p["wk"], a["wk"] = dense_init(ks[1], d, Hkv * hd, ("embed", "kv_heads"), cfg.param_dtype)
+    p["wv"], a["wv"] = dense_init(ks[2], d, Hkv * hd, ("embed", "kv_heads"), cfg.param_dtype)
+    p["wo"], a["wo"] = dense_init(ks[3], Hp * hd, d, ("heads", "embed"), cfg.param_dtype)
+    if cfg.qk_norm:
+        p["q_norm"], a["q_norm"] = jnp.ones((hd,), cfg.param_dtype), (None,)
+        p["k_norm"], a["k_norm"] = jnp.ones((hd,), cfg.param_dtype), (None,)
+    return p, a
+
+
+def _head_mask(cfg, plan, dtype):
+    Hp = plan.padded_heads(cfg.n_heads)
+    if Hp == cfg.n_heads:
+        return None
+    return (jnp.arange(Hp) < cfg.n_heads).astype(dtype)
+
+
+@dataclasses.dataclass
+class AttnCache:
+    """Linear (full-seq) or rolling (windowed) KV cache for one layer kind."""
+
+    k: jax.Array        # (L, B, S_slots, Hkv, hd)
+    v: jax.Array
+    pos: jax.Array      # (L, B, S_slots) absolute positions, -1 = empty
+
+
+def attention_fwd(p, x, cfg, plan, *, mode: str, pos_offset=0,
+                  cache_k=None, cache_v=None, cache_pos=None,
+                  window: Optional[int] = None, causal: Optional[bool] = None,
+                  chunked: bool = False, qmode: str = "train"):
+    """Returns (out, (new_k, new_v, new_pos)) — cache parts None in train mode."""
+    B, S, d = x.shape
+    hd = cfg.hd
+    Hp = plan.padded_heads(cfg.n_heads)
+    Hkv = cfg.n_kv_heads
+    causal = cfg.causal if causal is None else causal
+    h = rms_norm(x, p["ln"])
+    q = qdense(h, p["wq"], cfg.quant, mode=qmode).reshape(B, S, Hp, hd)
+    k = qdense(h, p["wk"], cfg.quant, mode=qmode).reshape(B, S, Hkv, hd)
+    v = qdense(h, p["wv"], cfg.quant, mode=qmode).reshape(B, S, Hkv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    q_pos = pos_offset + jnp.arange(S)
+    k_roped = rope(k, q_pos, cfg.rope_theta)
+    q = rope(q, q_pos, cfg.rope_theta)
+
+    new_cache = (None, None, None)
+    if mode == "train":
+        kv, vv, kv_pos = k_roped, v, q_pos
+    elif mode == "prefill":
+        kv, vv, kv_pos = k_roped, v, q_pos
+        new_cache = (k_roped, v, jnp.broadcast_to(q_pos[None], (B, S)).astype(jnp.int32))
+    else:  # decode: S == 1, write into cache slots
+        slots = cache_k.shape[1]
+        write_at = (pos_offset % slots) if window is not None else pos_offset
+        kv = jax.lax.dynamic_update_slice(cache_k, k_roped, (0, write_at, 0, 0))
+        vv = jax.lax.dynamic_update_slice(cache_v, v, (0, write_at, 0, 0))
+        posu = jax.lax.dynamic_update_slice(
+            cache_pos, jnp.broadcast_to(jnp.asarray(pos_offset, jnp.int32), (B, 1)),
+            (0, write_at))
+        new_cache = (kv, vv, posu)
+        kv_pos = posu[0]  # positions identical across batch
+
+    kv, vv = expand_kv(kv, vv, cfg.n_heads, Hp)
+    ldt = jnp.bfloat16 if getattr(cfg, "bf16_logits", False) else jnp.float32
+    if (window is not None and mode != "decode" and S > 2 * window
+            and getattr(cfg, "banded_attn", False)):
+        out = attn_banded(q, kv, vv, window=window, q_pos=q_pos,
+                          kv_pos=kv_pos, logits_dtype=ldt)
+    elif chunked and mode != "decode":
+        out = attn_chunked(q, kv, vv, causal=causal, window=window,
+                           q_pos=q_pos, kv_pos=kv_pos)
+    else:
+        out = attn_full(q, kv, vv, causal=causal, window=window,
+                        q_pos=q_pos, kv_pos=kv_pos, logits_dtype=ldt)
+    hm = _head_mask(cfg, plan, out.dtype)
+    if hm is not None:
+        out = out * hm[None, None, :, None]
+    out = qdense(out.reshape(B, S, Hp * hd), p["wo"], cfg.quant, mode=qmode)
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GeLU) with quantized GEMMs
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg, plan, d_ff: Optional[int] = None) -> tuple[dict, dict]:
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p, a = {}, {}
+    p["ln"], a["ln"] = norm_init(d, cfg.param_dtype)
+    p["w_in"], a["w_in"] = dense_init(ks[0], d, ff, ("embed", "mlp"), cfg.param_dtype)
+    if cfg.act == "swiglu":
+        p["w_gate"], a["w_gate"] = dense_init(ks[1], d, ff, ("embed", "mlp"), cfg.param_dtype)
+    p["w_out"], a["w_out"] = dense_init(ks[2], ff, d, ("mlp", "embed"), cfg.param_dtype)
+    return p, a
+
+
+def mlp_fwd(p, x, cfg, *, norm=True, qmode: str = "train"):
+    h = rms_norm(x, p["ln"]) if norm else x
+    up = qdense(h, p["w_in"], cfg.quant, mode=qmode)
+    if cfg.act == "swiglu":
+        up = jax.nn.silu(qdense(h, p["w_gate"], cfg.quant, mode=qmode)) * up
+    else:
+        up = jax.nn.gelu(up)
+    return qdense(up, p["w_out"], cfg.quant, mode=qmode)
+
+
+# ---------------------------------------------------------------------------
+# Mixture-of-Experts (token-choice top-k, capacity-based gather dispatch)
+# ---------------------------------------------------------------------------
+
+def init_moe(key, cfg, plan) -> tuple[dict, dict]:
+    d, E, eff = cfg.d_model, cfg.n_experts, cfg.expert_d_ff
+    ks = jax.random.split(key, 5)
+    p, a = {}, {}
+    p["ln"], a["ln"] = norm_init(d, cfg.param_dtype)
+    p["router"], a["router"] = dense_init(ks[0], d, E, ("embed", None), cfg.param_dtype)
+    s = 1.0 / math.sqrt(d)
+    p["w1"] = jax.random.normal(ks[1], (E, d, eff), cfg.param_dtype) * s
+    a["w1"] = ("expert", "embed", "mlp")
+    p["wg"] = jax.random.normal(ks[2], (E, d, eff), cfg.param_dtype) * s
+    a["wg"] = ("expert", "embed", "mlp")
+    p["w2"] = jax.random.normal(ks[3], (E, eff, d), cfg.param_dtype) * (1.0 / math.sqrt(eff))
+    a["w2"] = ("expert", "mlp", "embed")
+    if cfg.n_shared_experts:
+        sh, ash = init_mlp(ks[4], cfg, plan, d_ff=cfg.expert_d_ff * cfg.n_shared_experts)
+        p["shared"], a["shared"] = sh, ash
+    return p, a
+
+
+def moe_fwd(p, x, cfg):
+    """x (B,S,d) -> (out, aux_loss). Capacity-dropped token-choice routing.
+
+    Dispatch is gather/scatter-based (not one-hot matmul), so compiled
+    FLOPs reflect *active* expert compute: E*C*d*ff with
+    C = ceil(cf * T * k / E) — the MoE roofline stays honest.
+    """
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    T = B * S
+    xt = x.reshape(T, d)
+    h = rms_norm(xt, p["ln"])
+    logits = (h @ p["router"].astype(h.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, k)                      # (T,k)
+    gates = gates / jnp.sum(gates, axis=-1, keepdims=True)
+    # load-balancing aux loss (Switch-style)
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(jax.nn.one_hot(idx[:, 0], E, dtype=jnp.float32), axis=0)
+    aux = jnp.sum(me * ce) * E * cfg.router_aux_coef
+
+    # capacity: floor of 4 so tiny decode batches never drop; cap at T
+    # (an expert can receive each token at most once).
+    C = min(T, max(int(math.ceil(cfg.capacity_factor * T * k / E)), 4))
+    e_flat = idx.reshape(-1)                                   # (T*k,)
+    onehot = jax.nn.one_hot(e_flat, E, dtype=jnp.int32)
+    pos = (jnp.cumsum(onehot, axis=0) - 1)
+    pos = jnp.sum(pos * onehot, axis=-1)                       # (T*k,) slot in expert
+    keep = pos < C
+    tok = jnp.repeat(jnp.arange(T), k)
+    # dispatch: (E, C, d) buffer, dropped tokens discarded by mode="drop"
+    buf = jnp.zeros((E, C, d), h.dtype).at[
+        jnp.where(keep, e_flat, E), jnp.where(keep, pos, 0)
+    ].add(h[tok], mode="drop")
+    up = jnp.einsum("ecd,edf->ecf", buf, p["w1"].astype(h.dtype))
+    gate = jnp.einsum("ecd,edf->ecf", buf, p["wg"].astype(h.dtype))
+    act = jax.nn.silu(gate) * up
+    y_e = jnp.einsum("ecf,efd->ecd", act, p["w2"].astype(h.dtype))
+    # combine: gather each (token, k) slot's expert output, weight by gate
+    y_slots = y_e[jnp.where(keep, e_flat, 0), jnp.where(keep, pos, 0)]
+    y_slots = jnp.where(keep[:, None], y_slots, 0.0)
+    w_gates = gates.reshape(-1).astype(h.dtype)
+    y = jax.ops.segment_sum(y_slots * w_gates[:, None], tok, num_segments=T)
+    if cfg.n_shared_experts:
+        y = y + mlp_fwd(p["shared"], h, cfg, norm=False)
+    return y.reshape(B, S, d), aux

@@ -1,0 +1,110 @@
+"""RecurrentGemma recurrent block (arXiv:2402.19427): RG-LRU + causal
+depthwise conv, used in a 1:2 (attention : recurrent) pattern with local
+sliding-window MQA attention.
+
+Paper-technique applicability: the in/out/gate projections run through
+:func:`qdense`; the RG-LRU recurrence is element-wise fp dynamics (no GEMM)
+and stays fp (DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, norm_init, qdense, rms_norm
+
+RGLRU_C = 8.0  # paper's recurrence sharpness constant
+
+
+def init_rec_block(key, cfg, plan):
+    d = cfg.d_model
+    W = cfg.lru_width or d
+    cw = cfg.conv_width
+    ks = jax.random.split(key, 7)
+    p, a = {}, {}
+    p["ln"], a["ln"] = norm_init(d, cfg.param_dtype)
+    p["wx"], a["wx"] = dense_init(ks[0], d, W, ("embed", "mlp"), cfg.param_dtype)
+    p["wy"], a["wy"] = dense_init(ks[1], d, W, ("embed", "mlp"), cfg.param_dtype)
+    p["conv_w"] = jax.random.normal(ks[2], (cw, W), cfg.param_dtype) / math.sqrt(cw)
+    a["conv_w"] = (None, "mlp")
+    p["conv_b"] = jnp.zeros((W,), cfg.param_dtype); a["conv_b"] = ("mlp",)
+    p["wr"], a["wr"] = dense_init(ks[3], W, W, (None, "mlp"), cfg.param_dtype)
+    p["wi"], a["wi"] = dense_init(ks[4], W, W, (None, "mlp"), cfg.param_dtype)
+    # Λ init so a^c ∈ (0.9, 0.999) as in the paper
+    u = jax.random.uniform(ks[5], (W,), jnp.float32, 0.9, 0.999)
+    p["lam"] = jnp.log(jnp.exp(-jnp.log(u) / RGLRU_C) - 1.0).astype(cfg.param_dtype)
+    a["lam"] = ("mlp",)
+    p["wo"], a["wo"] = dense_init(ks[6], W, d, ("mlp", "embed"), cfg.param_dtype)
+    return p, a
+
+
+def _causal_conv1d(x, w, b, carry):
+    """Depthwise causal conv. x (B,S,W), w (cw,W), carry (B,cw-1,W)."""
+    cw = w.shape[0]
+    xp = jnp.concatenate([carry.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i : i + x.shape[1], :] * w[i].astype(x.dtype) for i in range(cw))
+    new_carry = xp[:, xp.shape[1] - (cw - 1) :, :]
+    return out + b.astype(x.dtype), new_carry
+
+
+def _rglru_scan(xg, a, h0):
+    """h_t = a_t * h_{t-1} + sqrt(1-a_t^2) * xg_t.  All (B,S,W) fp32."""
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 0.0))
+
+    def step(h, inp):
+        a_t, u_t = inp
+        h = a_t * h + u_t
+        return h, h
+
+    xs = (jnp.moveaxis(a, 1, 0), jnp.moveaxis(mult * xg, 1, 0))
+    h, hs = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(hs, 0, 1), h
+
+
+def _rglru_assoc(xg, a, h0):
+    """Parallel form via associative_scan (beyond-paper TPU optimization):
+    the linear recurrence h_t = a_t h_{t-1} + b_t composes associatively as
+    (a, b) * (a', b') = (a a', a' b + b')."""
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 0.0))
+    b = mult * xg
+    # fold h0 into the first element
+    b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(x, y):
+        ax, bx = x
+        ay, by = y
+        return ax * ay, ay * bx + by
+
+    a_c, h_seq = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h_seq, h_seq[:, -1]
+
+
+def rec_block_fwd(p, x, cfg, plan, *, mode: str, state=None, use_assoc=False):
+    """x (B,S,d); state: dict(h (B,W) f32, conv (B,cw-1,W)) or None.
+
+    Returns (out, new_state).
+    """
+    B, S, d = x.shape
+    W = cfg.lru_width or d
+    cw = cfg.conv_width
+    if state is None:
+        state = dict(
+            h=jnp.zeros((B, W), jnp.float32),
+            conv=jnp.zeros((B, cw - 1, W), jnp.float32),
+        )
+    h_in = rms_norm(x, p["ln"])
+    xb = qdense(h_in, p["wx"], cfg.quant)
+    yb = jax.nn.gelu(qdense(h_in, p["wy"], cfg.quant))
+    xc, conv_new = _causal_conv1d(xb, p["conv_w"], p["conv_b"], state["conv"])
+    r = jax.nn.sigmoid(xc @ p["wr"].astype(xc.dtype)).astype(jnp.float32)
+    i = jax.nn.sigmoid(xc @ p["wi"].astype(xc.dtype)).astype(jnp.float32)
+    log_a = -RGLRU_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    gated = i * xc.astype(jnp.float32)
+    scan_fn = _rglru_assoc if (use_assoc or cfg.rglru_assoc) else _rglru_scan
+    h_seq, h_last = scan_fn(gated, a, state["h"])
+    y = (h_seq.astype(x.dtype) * yb)
+    out = qdense(y, p["wo"], cfg.quant)
+    return out, dict(h=h_last, conv=conv_new.astype(jnp.float32))

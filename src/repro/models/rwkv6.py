@@ -1,0 +1,132 @@
+"""RWKV-6 "Finch" block (arXiv:2404.05892): data-dependent decay linear
+attention + channel mix.  Attention-free; O(1) decode state.
+
+Paper-technique applicability (DESIGN.md §Arch-applicability): the R/K/V/G/O
+and channel-mix projections run through :func:`qdense` (AND-Accumulation
+engine when quantized); the decay LoRA and the recurrence itself are
+non-GEMM fp dynamics and stay fp.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, norm_init, qdense, rms_norm
+
+N_LORA = 5  # w, k, v, r, g
+
+
+def init_rwkv_block(key, cfg, plan):
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    H = d // hd
+    r = cfg.lora_rank
+    ks = jax.random.split(key, 12)
+    p, a = {}, {}
+    p["ln1"], a["ln1"] = norm_init(d, cfg.param_dtype)
+    p["ln2"], a["ln2"] = norm_init(d, cfg.param_dtype)
+    # token-shift ddlerp
+    p["mu_base"] = jnp.zeros((d,), cfg.param_dtype); a["mu_base"] = ("embed",)
+    p["mus"] = jnp.zeros((N_LORA, d), cfg.param_dtype); a["mus"] = (None, "embed")
+    p["lora_A"] = jax.random.normal(ks[0], (d, N_LORA, r), cfg.param_dtype) * 0.01
+    a["lora_A"] = ("embed", None, None)
+    p["lora_B"] = jax.random.normal(ks[1], (N_LORA, r, d), cfg.param_dtype) * 0.01
+    a["lora_B"] = (None, None, "embed")
+    # decay base
+    p["lam"] = jnp.full((d,), -2.0, cfg.param_dtype); a["lam"] = ("embed",)
+    p["u"] = jnp.zeros((H, hd), cfg.param_dtype); a["u"] = ("heads", None)
+    for nm, kk in zip(("wr", "wk", "wv", "wg"), ks[2:6]):
+        p[nm], a[nm] = dense_init(kk, d, d, ("embed", "heads"), cfg.param_dtype)
+    p["wo"], a["wo"] = dense_init(ks[6], d, d, ("heads", "embed"), cfg.param_dtype)
+    p["ln_x"] = jnp.ones((H, hd), cfg.param_dtype); a["ln_x"] = ("heads", None)
+    # channel mix
+    p["cm_mu_k"] = jnp.zeros((d,), cfg.param_dtype); a["cm_mu_k"] = ("embed",)
+    p["cm_mu_r"] = jnp.zeros((d,), cfg.param_dtype); a["cm_mu_r"] = ("embed",)
+    p["cm_wk"], a["cm_wk"] = dense_init(ks[7], d, cfg.d_ff, ("embed", "mlp"), cfg.param_dtype)
+    p["cm_wv"], a["cm_wv"] = dense_init(ks[8], cfg.d_ff, d, ("mlp", "embed"), cfg.param_dtype)
+    p["cm_wr"], a["cm_wr"] = dense_init(ks[9], d, d, ("embed", "heads"), cfg.param_dtype)
+    return p, a
+
+
+def _shift(x, last):
+    """Token shift: x_{t-1} with carry-in `last` (B,d) (zeros at t=0 train)."""
+    return jnp.concatenate([last[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _wkv_scan(r, k, v, w, u, s0):
+    """Linear-attention recurrence.
+
+    r,k,w (B,S,H,K); v (B,S,H,V); u (H,K); s0 (B,H,K,V).
+    o_t = r_t . (S + u*k_t (x) v_t);  S <- diag(w_t) S + k_t (x) v_t
+    """
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp  # (B,H,K)/(B,H,V)
+        kv = jnp.einsum("bhk,bhv->bhkv", k_t, v_t)
+        o = jnp.einsum("bhk,bhkv->bhv", r_t, s) + (
+            jnp.sum(r_t * u[None] * k_t, axis=-1, keepdims=True) * v_t
+        )
+        s = w_t[..., None] * s + kv
+        return s, o
+
+    rs, ks_, vs, ws = (jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    s, os_ = jax.lax.scan(step, s0, (rs, ks_, vs, ws))
+    return jnp.moveaxis(os_, 0, 1), s  # (B,S,H,V), final state
+
+
+def rwkv_block_fwd(p, x, cfg, plan, *, mode: str, state=None):
+    """x (B,S,d). state: dict(tm_x, cm_x (B,d), s (B,H,K,V)) or None (train).
+
+    Returns (out, new_state).
+    """
+    B, S, d = x.shape
+    hd = cfg.rwkv_head_dim
+    H = d // hd
+    if state is None:
+        state = dict(
+            tm_x=jnp.zeros((B, d), x.dtype),
+            cm_x=jnp.zeros((B, d), x.dtype),
+            s=jnp.zeros((B, H, hd, hd), jnp.float32),
+        )
+    # ---- time mix ----
+    h = rms_norm(x, p["ln1"])
+    prev = _shift(h, state["tm_x"])
+    dx = prev - h
+    xxx = h + dx * p["mu_base"].astype(h.dtype)
+    sel = jnp.tanh(jnp.einsum("bsd,dnr->bsnr", xxx, p["lora_A"].astype(h.dtype)))
+    sel = jnp.einsum("bsnr,nrd->bsnd", sel, p["lora_B"].astype(h.dtype))
+    mixed = h[:, :, None, :] + dx[:, :, None, :] * (
+        p["mus"].astype(h.dtype)[None, None] + sel
+    )  # (B,S,5,d)
+    xw, xk, xv, xr, xg = (mixed[:, :, i] for i in range(N_LORA))
+    w = jnp.exp(-jnp.exp(p["lam"].astype(jnp.float32) + xw.astype(jnp.float32)))
+    r = qdense(xr, p["wr"], cfg.quant).reshape(B, S, H, hd)
+    k = qdense(xk, p["wk"], cfg.quant).reshape(B, S, H, hd)
+    v = qdense(xv, p["wv"], cfg.quant).reshape(B, S, H, hd)
+    g = jax.nn.silu(qdense(xg, p["wg"], cfg.quant))
+    wh = w.reshape(B, S, H, hd)
+    o, s_new = _wkv_scan(
+        r.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32),
+        wh, p["u"].astype(jnp.float32), state["s"]
+    )
+    # per-head group norm
+    o = o - jnp.mean(o, axis=-1, keepdims=True)
+    o = o * jax.lax.rsqrt(jnp.var(o, axis=-1) + 1e-6)[..., None]
+    o = (o * p["ln_x"].astype(jnp.float32)[None, None]).astype(x.dtype)
+    o = qdense((o.reshape(B, S, d) * g), p["wo"], cfg.quant)
+    x = x + o
+    new_tm = h[:, -1, :]
+    # ---- channel mix ----
+    h2 = rms_norm(x, p["ln2"])
+    prev2 = _shift(h2, state["cm_x"])
+    dx2 = prev2 - h2
+    xk2 = h2 + dx2 * p["cm_mu_k"].astype(h2.dtype)
+    xr2 = h2 + dx2 * p["cm_mu_r"].astype(h2.dtype)
+    kk = jnp.square(jax.nn.relu(qdense(xk2, p["cm_wk"], cfg.quant)))
+    out = jax.nn.sigmoid(qdense(xr2, p["cm_wr"], cfg.quant)) * qdense(
+        kk, p["cm_wv"], cfg.quant
+    )
+    x = x + out
+    new_state = dict(tm_x=new_tm, cm_x=h2[:, -1, :], s=s_new)
+    return x, new_state

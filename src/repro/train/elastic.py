@@ -1,0 +1,69 @@
+"""Elastic scaling + straggler mitigation for the multi-pod runtime.
+
+Checkpoint-mediated elasticity: shardings are *functions of the mesh*
+(distributed/sharding.py), so growing/shrinking the slice is: drain ->
+full checkpoint -> rebuild mesh/plan -> re-place params under the new
+shardings -> resume at the same step with the same data cursor (the
+pipeline addresses batches by (step, micro), not by wall clock).
+
+Straggler policy: deterministic data reassignment — every host can compute
+any other host's shard from (step, host_id), so a backup host can shadow a
+straggler's microbatch without coordination (speculative execution); the
+first result wins at the all-reduce via the standard "first write" rule.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Sequence
+
+import jax
+import numpy as np
+
+from repro.configs.base import make_plan
+from repro.distributed import sharding as shd
+
+
+@dataclasses.dataclass
+class ElasticState:
+    mesh: Any
+    plan: Any
+
+
+def build(mesh) -> ElasticState:
+    shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return ElasticState(mesh=mesh, plan=make_plan(shape))
+
+
+def remesh(params, param_axes, cfg, old: ElasticState, new_mesh) -> tuple[Any, ElasticState]:
+    """Re-place a param pytree under a new mesh's shardings."""
+    new = build(new_mesh)
+    sh = shd.tree_shardings(params, param_axes, new.plan, new_mesh, cfg)
+
+    def place(x, s):
+        return jax.device_put(np.asarray(x), s)
+
+    # lockstep walk (axes leaves are tuples)
+    def walk(t, s):
+        if isinstance(t, dict):
+            return {k: walk(t[k], s[k]) for k in t}
+        if isinstance(t, list):
+            return [walk(a, b) for a, b in zip(t, s)]
+        return place(t, s)
+
+    return walk(params, sh), new
+
+
+def shard_assignment(n_hosts: int, step: int, micro: int,
+                     global_batch: int) -> list[tuple[int, int]]:
+    """Deterministic (host -> batch-slice) map; any host can recompute any
+    other host's slice, enabling speculative straggler shadowing."""
+    per = global_batch // n_hosts
+    # rotate assignments each step so a persistently slow host doesn't
+    # starve the same data shard
+    rot = (step + micro) % n_hosts
+    return [((h + rot) % n_hosts, h * per) for h in range(n_hosts)]
+
+
+def straggler_backup(host: int, n_hosts: int, step: int, micro: int) -> int:
+    """Which host shadows ``host`` this microbatch (ring neighbor)."""
+    return (host + 1 + (step + micro) % (n_hosts - 1)) % n_hosts if n_hosts > 1 else host

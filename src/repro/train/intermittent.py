@@ -1,0 +1,151 @@
+"""Power-intermittency-resilient training — the NV-FA adapted to pods.
+
+Paper §II-B3: NV full adders retain *partial accumulation state* so a
+power failure loses only the in-flight add (~(m+n)x58 ps), not the whole
+feature map; full NV writes happen every fixed number of frames.
+
+Datacenter analogue implemented here: gradient-accumulation microbatches
+are the partial sums.  The trainer snapshots (microbatch index, gradient
+accumulator, RNG) every ``snapshot_every`` microbatches — cheap and
+frequent, like the NV-FF — while full (params+opt) checkpoints happen
+every ``full_every`` steps.  On restart after a failure the step resumes
+*mid-accumulation*: at most ``snapshot_every - 1`` microbatches are
+recomputed, and the result is bit-identical to the uninterrupted run
+(deterministic data + integer-indexed RNG), which tests/test_intermittent.py
+asserts.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Iterable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import optimizer as opt_mod
+from .checkpoint import Checkpointer
+
+
+class PowerFailure(RuntimeError):
+    """Injected by tests / chaos harnesses to simulate power loss."""
+
+
+@dataclasses.dataclass
+class IntermittentConfig:
+    accum_steps: int = 8          # microbatches per optimizer step
+    snapshot_every: int = 2       # NV-FA analogue period (microbatches)
+    full_every: int = 10          # full checkpoint period (steps)
+
+
+class IntermittentTrainer:
+    """Microbatched trainer with mid-step restartability.
+
+    loss_fn(params, microbatch) -> (loss, metrics); grads are averaged over
+    ``accum_steps`` microbatches produced by ``batch_fn(step, micro_idx)``
+    (deterministic addressing = the replayable "frame stream").
+    """
+
+    def __init__(self, loss_fn, params, opt_cfg: opt_mod.OptConfig,
+                 batch_fn: Callable[[int, int], Any],
+                 ckpt: Checkpointer, icfg: IntermittentConfig,
+                 fail_at: Optional[set] = None):
+        self.loss_fn = loss_fn
+        self.opt_cfg = opt_cfg
+        self.batch_fn = batch_fn
+        self.ckpt = ckpt
+        self.icfg = icfg
+        self.fail_at = fail_at or set()   # {(step, micro_idx), ...}
+        self.params = params
+        self.opt_state = opt_mod.init_opt_state(params, opt_cfg)
+        self.step = 0
+        self._grad_fn = jax.jit(jax.value_and_grad(loss_fn, has_aux=True))
+        self._zero_grads = lambda: jax.tree.map(jnp.zeros_like, self.params)
+
+    # -- persistence ---------------------------------------------------------
+    def _train_state(self):
+        return dict(params=self.params, opt=self.opt_state)
+
+    def save_full(self):
+        self.ckpt.save(self.step, self._train_state(), tag="full")
+
+    def restore(self) -> bool:
+        """Restore latest full checkpoint + any newer accumulation snapshot."""
+        step, st = self.ckpt.restore(self._train_state(), tag="full")
+        restored = False
+        if st is not None:
+            self.params, self.opt_state = st["params"], st["opt"]
+            self.step = step
+            restored = True
+        snap_step = self.ckpt.latest_step(tag="accum")
+        if snap_step is not None and snap_step >= self.step:
+            template = dict(accum=self._zero_grads(),
+                            micro=jnp.zeros((), jnp.int32),
+                            loss_sum=jnp.zeros(()))
+            _, snap = self.ckpt.restore(template, step=snap_step, tag="accum")
+            self._pending = (snap_step, int(snap["micro"]), snap["accum"],
+                             float(snap["loss_sum"]))
+            restored = True
+        else:
+            self._pending = None
+        return restored
+
+    # -- the step ------------------------------------------------------------
+    def _run_step(self, resume_micro: int = 0, accum=None, loss_sum=0.0):
+        icfg = self.icfg
+        accum = accum if accum is not None else self._zero_grads()
+        for mi in range(resume_micro, icfg.accum_steps):
+            if (self.step, mi) in self.fail_at:
+                self.fail_at.discard((self.step, mi))
+                raise PowerFailure(f"power lost at step {self.step} micro {mi}")
+            batch = self.batch_fn(self.step, mi)
+            (loss, _), grads = self._grad_fn(self.params, batch)
+            accum = jax.tree.map(jnp.add, accum, grads)
+            loss_sum = loss_sum + float(loss)
+            nxt = mi + 1
+            if nxt % icfg.snapshot_every == 0 and nxt < icfg.accum_steps:
+                # NV-FA write: persist the partial accumulation
+                self.ckpt.save(self.step, dict(
+                    accum=accum, micro=jnp.asarray(nxt, jnp.int32),
+                    loss_sum=jnp.asarray(loss_sum)), tag="accum")
+                self.ckpt.wait()
+        grads = jax.tree.map(lambda g: g / icfg.accum_steps, accum)
+        self.params, self.opt_state, stats = opt_mod.apply_updates(
+            self.params, grads, self.opt_state, self.opt_cfg)
+        self.step += 1
+        return dict(loss=loss_sum / icfg.accum_steps, **stats)
+
+    def train(self, n_steps: int):
+        """Run n_steps; raises PowerFailure when injected (caller restarts)."""
+        metrics = None
+        pend = getattr(self, "_pending", None)
+        if pend is not None and pend[0] == self.step:
+            _, micro, accum, loss_sum = pend
+            self._pending = None
+            metrics = self._run_step(micro, accum, loss_sum)
+            if self.step % self.icfg.full_every == 0:
+                self.save_full()
+        while self.step < n_steps:
+            metrics = self._run_step()
+            if self.step % self.icfg.full_every == 0:
+                self.save_full()
+        self.ckpt.wait()
+        return metrics
+
+
+def run_with_failures(make_trainer, n_steps: int, max_restarts: int = 64):
+    """Chaos harness: restart-on-failure loop (the battery-less IoT node)."""
+    restarts = 0
+    trainer = make_trainer()
+    trainer.restore()
+    while True:
+        try:
+            out = trainer.train(n_steps)
+            trainer.save_full()
+            trainer.ckpt.wait()
+            return trainer, out, restarts
+        except PowerFailure:
+            restarts += 1
+            if restarts > max_restarts:
+                raise
+            trainer = make_trainer()   # cold boot
+            trainer.restore()

@@ -1,0 +1,114 @@
+"""Pure-pytree optimizers (no optax): AdamW, SGD-momentum, Lion.
+
+State is a pytree mirroring params, so the distributed layer shards
+optimizer moments exactly like parameters (ZeRO: params are already
+model x data sharded via the FSDP rule, hence moments are too).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    kind: str = "adamw"           # adamw | sgd | lion
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def schedule(cfg: OptConfig, step):
+    """Linear warmup + cosine decay."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * cos
+
+
+def init_opt_state(params, cfg: OptConfig):
+    zeros = lambda: jax.tree.map(jnp.zeros_like, params)
+    st = dict(step=jnp.zeros((), jnp.int32))
+    if cfg.kind in ("adamw",):
+        st["m"] = zeros()
+        st["v"] = zeros()
+    elif cfg.kind in ("sgd", "lion"):
+        st["m"] = zeros()
+    return st
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm):
+    g = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (g + 1e-9))
+    return jax.tree.map(lambda x: x * scale, grads), g
+
+
+def apply_updates(params, grads, state, cfg: OptConfig):
+    """Returns (new_params, new_state, stats)."""
+    step = state["step"] + 1
+    lr = schedule(cfg, step)
+    if cfg.grad_clip:
+        grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    else:
+        gnorm = global_norm(grads)
+
+    if cfg.kind == "adamw":
+        b1, b2 = cfg.b1, cfg.b2
+        m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+        v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g),
+                         state["v"], grads)
+        t = step.astype(jnp.float32)
+        bc1 = 1 - b1 ** t
+        bc2 = 1 - b2 ** t
+
+        def upd(p, m_, v_):
+            u = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + cfg.eps)
+            return p - lr * (u + cfg.weight_decay * p)
+
+        new_params = jax.tree.map(upd, params, m, v)
+        new_state = dict(step=step, m=m, v=v)
+    elif cfg.kind == "lion":
+        b1, b2 = cfg.b1, cfg.b2
+
+        def upd(p, m_, g):
+            u = jnp.sign(b1 * m_ + (1 - b1) * g)
+            return p - lr * (u + cfg.weight_decay * p)
+
+        new_params = jax.tree.map(upd, params, state["m"], grads)
+        m = jax.tree.map(lambda m_, g: b2 * m_ + (1 - b2) * g, state["m"], grads)
+        new_state = dict(step=step, m=m)
+    elif cfg.kind == "sgd":
+        m = jax.tree.map(lambda m_, g: cfg.b1 * m_ + g, state["m"], grads)
+        new_params = jax.tree.map(lambda p, m_: p - lr * m_, params, m)
+        new_state = dict(step=step, m=m)
+    else:
+        raise ValueError(cfg.kind)
+    return new_params, new_state, dict(lr=lr, grad_norm=gnorm)
+
+
+def opt_state_axes(param_axes, cfg: OptConfig):
+    """Logical axes for the optimizer state (mirrors init_opt_state)."""
+    ax = dict(step=())
+    if cfg.kind == "adamw":
+        ax["m"] = param_axes
+        ax["v"] = param_axes
+    elif cfg.kind in ("sgd", "lion"):
+        ax["m"] = param_axes
+    return ax

@@ -1,0 +1,98 @@
+"""Distributed trainer: jit'd sharded train step + data pipeline +
+checkpoint/restore + (optional) gradient compression and mid-step
+intermittency snapshots.
+
+This is the production loop behind launch/train.py; IntermittentTrainer
+(intermittent.py) is the failure-injection harness over the same step.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import sharding as shd
+from repro.models import transformer as T
+from . import optimizer as opt_mod
+from .checkpoint import Checkpointer
+from .compression import compressed_allreduce, init_error_feedback
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 100
+    accum_steps: int = 1
+    log_every: int = 10
+    ckpt_every: int = 50
+    compress_grads: bool = False
+    compress_bits: int = 8
+
+
+class Trainer:
+    def __init__(self, cfg, plan, mesh, opt_cfg: opt_mod.OptConfig,
+                 tcfg: TrainConfig, ckpt_dir: Optional[str] = None,
+                 loss_fn=None):
+        self.cfg, self.plan, self.mesh = cfg, plan, mesh
+        self.opt_cfg, self.tcfg = opt_cfg, tcfg
+        self.loss_fn = loss_fn or (lambda p, b: T.lm_loss(p, b, cfg, plan))
+        self.ckpt = Checkpointer(ckpt_dir) if ckpt_dir else None
+        self.step = 0
+        self._build()
+
+    def _build(self):
+        cfg, plan, mesh = self.cfg, self.plan, self.mesh
+        params, axes = T.init_lm(jax.random.PRNGKey(0), cfg, plan)
+        p_sh = shd.tree_shardings(params, axes, plan, mesh, cfg)
+        self.params = jax.device_put(params, p_sh)
+        self.opt_state = opt_mod.init_opt_state(self.params, self.opt_cfg)
+        self.ef = (init_error_feedback(self.params)
+                   if self.tcfg.compress_grads else None)
+        tc, oc = self.tcfg, self.opt_cfg
+
+        def train_step(params, opt_state, ef, batch):
+            (loss, metrics), grads = jax.value_and_grad(
+                self.loss_fn, has_aux=True)(params, batch)
+            if tc.compress_grads:
+                grads, ef = compressed_allreduce(grads, ef,
+                                                 bits=tc.compress_bits)
+            params, opt_state, stats = opt_mod.apply_updates(
+                params, grads, opt_state, oc)
+            return params, opt_state, ef, {**metrics, **stats}
+
+        self._step_fn = jax.jit(train_step, donate_argnums=(0, 1, 2))
+
+    def restore(self):
+        if not self.ckpt:
+            return False
+        st = dict(params=self.params, opt=self.opt_state)
+        step, restored = self.ckpt.restore(st)
+        if restored is None:
+            return False
+        self.params, self.opt_state = restored["params"], restored["opt"]
+        self.step = step
+        return True
+
+    def run(self, batch_fn: Callable[[int, int], Any], log=print):
+        history = []
+        t0 = time.time()
+        while self.step < self.tcfg.steps:
+            batch = batch_fn(self.step, 0)
+            self.params, self.opt_state, self.ef, m = self._step_fn(
+                self.params, self.opt_state, self.ef, batch)
+            self.step += 1
+            if self.step % self.tcfg.log_every == 0 or self.step == 1:
+                m = {k: float(v) for k, v in m.items()}
+                m["step"] = self.step
+                m["sps"] = self.step / (time.time() - t0)
+                history.append(m)
+                log(f"step {self.step}: loss={m['loss']:.4f} "
+                    f"acc={m.get('acc', 0):.3f} gnorm={m['grad_norm']:.2f}")
+            if self.ckpt and self.step % self.tcfg.ckpt_every == 0:
+                self.ckpt.save(self.step,
+                               dict(params=self.params, opt=self.opt_state))
+        if self.ckpt:
+            self.ckpt.wait()
+        return history

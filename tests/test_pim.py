@@ -1,0 +1,118 @@
+"""PIM co-simulation vs the paper's published numbers.
+
+Calibration fits ONE energy scale per design on the Table II ImageNet
+column; everything asserted here beyond that column is a *prediction* of
+the structural model (see accelsim.py docstring).
+"""
+import numpy as np
+import pytest
+
+from repro.pim import accelsim as A
+from repro.pim.energy import DESIGNS
+from repro.pim.mapper import accel_cost, model_work
+from repro.models.cnn import alexnet_spec
+
+
+def test_table2_imagenet_column_exact():
+    t2 = A.table2()
+    for d in ("reram", "imce", "proposed"):
+        got = t2[d]["imagenet"]["energy_uj"]
+        want = A.TABLE2[d]["imagenet"][0]
+        assert abs(got - want) / want < 0.01, (d, got, want)
+
+
+def test_table2_mnist_predictions():
+    t2 = A.table2()
+    # proposed & IMCE MNIST predicted within 35% of the paper
+    for d in ("proposed", "imce"):
+        got = t2[d]["mnist"]["energy_uj"]
+        want = A.TABLE2[d]["mnist"][0]
+        assert abs(got - want) / want < 0.35, (d, got, want)
+
+
+def test_headline_speed_ratios():
+    """IMCE 3x and ReRAM 9x speedups are structural (cycle counts)."""
+    works = model_work(alexnet_spec(), 224, 1, 1)
+    fps = {k: accel_cost(d, works)["fps"] for k, d in DESIGNS.items()}
+    assert fps["proposed"] / fps["imce"] == pytest.approx(3.0, rel=0.15)
+    assert fps["proposed"] / fps["reram"] == pytest.approx(9.0, rel=0.15)
+
+
+def test_headline_energy_ratios():
+    r_ims = A.simulate("imce", "imagenet")["energy_uj"] / \
+        A.simulate("proposed", "imagenet")["energy_uj"]
+    r_rer = A.simulate("reram", "imagenet")["energy_uj"] / \
+        A.simulate("proposed", "imagenet")["energy_uj"]
+    # Table II raw ratios: 1.66x IMCE, 4.8x ReRAM (paper's 2.1/5.4 headlines
+    # average Fig. 9's config sweep; see EXPERIMENTS.md discussion)
+    assert r_ims == pytest.approx(785.25 / 471.8, rel=0.05)
+    assert r_rer == pytest.approx(2275.34 / 471.8, rel=0.05)
+
+
+def test_asic_claims_area_normalized():
+    p = A.simulate("proposed", "imagenet")
+    a = A.simulate("asic", "imagenet")
+    e_ratio = (a["energy_uj"] * a["area_mm2"]) / (p["energy_uj"] * p["area_mm2"])
+    s_ratio = p["fps_per_mm2"] / a["fps_per_mm2"]
+    assert e_ratio == pytest.approx(9.7, rel=0.25)
+    assert s_ratio == pytest.approx(13.5, rel=0.25)
+
+
+def test_compressor_vs_serial_counter_is_the_win():
+    """Ablation: give the proposed design IMCE's serial counter and its
+    advantage must collapse — the paper's central §II-B1 claim."""
+    import dataclasses
+    works = model_work(alexnet_spec(), 224, 1, 1)
+    prop = DESIGNS["proposed"]
+    crippled = dataclasses.replace(prop, c_cmp=DESIGNS["imce"].c_cmp,
+                                   e_cmp_row=DESIGNS["imce"].e_cmp_row)
+    fast = accel_cost(prop, works)
+    slow = accel_cost(crippled, works)
+    assert fast["fps"] / slow["fps"] == pytest.approx(3.0, rel=0.1)
+    assert slow["energy_uj"] / fast["energy_uj"] > 1.5
+
+
+def test_bitwidth_scaling():
+    """Work scales with m*n bit-plane pairs (Eq. 1): W1A4 costs ~4x W1A1
+    in the quantized layers."""
+    e11 = A.simulate("proposed", "imagenet", 1, 1)
+    e41 = A.simulate("proposed", "imagenet", 4, 1)
+    # AlexNet's fp (8x8-bit) first conv dominates row-ops at 1:1, damping
+    # the 4x mid-layer scaling — structurally expected, also in the paper.
+    ratio = e41["energy_uj"] / e11["energy_uj"]
+    assert 1.25 < ratio < 4.0
+
+
+def test_storage_model_fig8():
+    from repro.core.quant import model_storage_bits
+    from repro.models.cnn import count_acts, count_params, svhn_cnn_spec, alexnet_spec
+    spec = svhn_cnn_spec(20)
+    p, a = count_params(spec), count_acts(spec, 40)
+    s32 = model_storage_bits(p, a, 32, 32)
+    s14 = model_storage_bits(p, a, 1, 4)
+    assert 6 < s32 / s14 < 16  # paper: ~11.7x reduction for 1:4
+    # AlexNet 1:1 vs fp32 (paper Fig. 8b says ~6x for its 40MB deployment
+    # figure, which keeps first/last layers fp and counts buffers; the pure
+    # weight+activation-bit ratio ceiling is 32x — we check both forms)
+    ap, aa = count_params(alexnet_spec()), count_acts(alexnet_spec(), 224)
+    pure = model_storage_bits(ap, aa, 32, 32) / model_storage_bits(ap, aa, 1, 1)
+    assert 16 < pure <= 32.5
+    # deployment form: first+last layers fp32 (paper's quantization policy)
+    spec = alexnet_spec()
+    fl = sum(s.k * s.k * s.cin * s.cout for s in spec if s.role in ("first", "last"))
+    deploy_bits = fl * 32 + (ap - fl) * 1 + aa * 8
+    deploy_ratio = (ap + aa) * 32 / deploy_bits
+    assert 4 < deploy_ratio < 16  # paper's ~6x regime
+
+
+def test_intermittency_forward_progress():
+    """Checkpointing partial sums must dominate restart-from-scratch under
+    frequent power failures (the paper's battery-less IoT scenario)."""
+    from repro.pim.intermittent import forward_progress
+    # high failure rate: 1 failure per 0.2 frame-times
+    with_nv = forward_progress(n_frames=200, frame_time_us=100.0,
+                               mtbf_us=20.0, checkpoint_period_frames=1)
+    without = forward_progress(n_frames=200, frame_time_us=100.0,
+                               mtbf_us=20.0, checkpoint_period_frames=0)
+    assert with_nv["completed_frames"] > without["completed_frames"]
+    assert with_nv["efficiency"] > 2 * without["efficiency"]
