@@ -1,0 +1,160 @@
+"""Serve-path benchmark: fused + pre-quantized pipeline vs the seed path.
+
+Baseline is the seed ``cnn_forward(mode="serve")`` dataflow: float weights
+re-quantized by ``weight_levels`` on every call, f32 im2col patches, the
+hardwired ``engine="int8"`` GEMM, and a separate rowsum/epilogue pass.
+The optimized path serves from ``prepare_serve_params`` (weights quantized
+once at load) through the backend-dispatched engine
+(``repro.kernels.ops.select_engine``; fused Pallas on TPU, exact f32 GEMM
+on CPU).
+
+Emits the repo's ``name,us_per_call,derived`` CSV plus
+``results/bench_serve.json``.  Run standalone::
+
+    PYTHONPATH=src python benchmarks/bench_serve.py [--fast]
+
+or via ``benchmarks/run.py`` (job name ``serve_fused``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def _timeit(fn, *args, n: int = 3) -> float:
+    out = fn(*args)
+    jax.block_until_ready(out)  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n * 1e6  # us
+
+
+def _conv_oh(s, h: int) -> int:
+    from repro.core.conv_lowering import _out_hw
+
+    pad = "VALID" if (s.fc or s.k == 1) else "SAME"
+    return max(_out_hw(h, h, s.k, s.k, s.stride, pad)[0], 1)
+
+
+def _layer_shapes(spec, img: int):
+    """Replay cnn_forward's spatial bookkeeping: input (h, w) per layer."""
+    h = img
+    shapes = []
+    for s in spec:
+        if s.fc and s.k > 1 and h != s.k:
+            h = s.k
+        shapes.append(h)
+        h = _conv_oh(s, h)
+        if s.pool:
+            h //= 2
+    return shapes
+
+
+def _arch_rows(name, spec, img: int, batch: int, quant, per_layer: bool, n: int):
+    from repro.core.conv_lowering import quant_conv2d, quant_conv2d_pre
+    from repro.core.prequant import is_fp_layer, serve_weight_bytes
+    from repro.kernels.ops import select_engine
+    from repro.models.cnn import cnn_forward, init_cnn, prepare_serve_params
+
+    seed_quant = dataclasses.replace(quant, engine="int8")   # seed serve path
+    auto_quant = dataclasses.replace(quant, engine="auto")
+    params, _ = init_cnn(jax.random.PRNGKey(0), spec)
+    serve_params = prepare_serve_params(params, spec, auto_quant)
+    x = jax.random.uniform(jax.random.PRNGKey(1), (batch, img, img, 3))
+
+    rows = []
+    if per_layer:
+        for i, (s, h) in enumerate(zip(spec, _layer_shapes(spec, img))):
+            if is_fp_layer(s, quant):
+                continue
+            pad = "VALID" if (s.fc or s.k == 1) else "SAME"
+            xi = jax.random.uniform(jax.random.PRNGKey(i), (batch, h, h, s.cin))
+            p, sp = params[i], serve_params[i]
+            base_us = _timeit(
+                lambda xi=xi, p=p, s=s, pad=pad: quant_conv2d(
+                    xi, p["w"], stride=s.stride, padding=pad,
+                    a_bits=quant.a_bits, w_bits=quant.w_bits, engine="int8"),
+                n=n)
+            pre_us = _timeit(
+                lambda xi=xi, sp=sp, s=s, pad=pad: quant_conv2d_pre(
+                    xi, sp["w_lv"], sp["s_w"], sp["z_w"], kh=s.k, kw=s.k,
+                    stride=s.stride, padding=pad, a_bits=quant.a_bits,
+                    w_bits=quant.w_bits),
+                n=n)
+            oh = _conv_oh(s, h)
+            eng = select_engine(batch * oh * oh, s.k * s.k * s.cin, s.cout,
+                                quant.a_bits, quant.w_bits)
+            rows.append(dict(
+                name=f"{name}_L{i}", kind="layer", shape=f"{h}x{h}x{s.cin}",
+                k=s.k, cout=s.cout, engine=eng,
+                base_us=round(base_us), fused_us=round(pre_us),
+                speedup=round(base_us / pre_us, 2)))
+
+    base_fwd = jax.jit(
+        lambda x: cnn_forward(params, x, spec, seed_quant, "serve"))
+    fused_fwd = jax.jit(
+        lambda x: cnn_forward(serve_params, x, spec, auto_quant, "serve"))
+    base_us = _timeit(base_fwd, x, n=n)
+    fused_us = _timeit(fused_fwd, x, n=n)
+    n_q = sum(0 if is_fp_layer(s, quant) else 1 for s in spec)
+    f32_patch_bytes = sum(
+        4 * batch * _conv_oh(s, h) ** 2 * s.k * s.k * s.cin
+        for s, h in zip(spec, _layer_shapes(spec, img))
+        if not is_fp_layer(s, quant))
+    rows.append(dict(
+        name=f"{name}_e2e", kind="e2e", batch=batch, img=img, quant=quant.tag(),
+        base_us=round(base_us), fused_us=round(fused_us),
+        speedup=round(base_us / fused_us, 2),
+        # eliminated per-call work (the fusion accounting, DESIGN.md §2.3)
+        weight_levels_calls_eliminated=n_q,
+        weight_bytes_fp32=serve_weight_bytes(params),
+        weight_bytes_prequant=serve_weight_bytes(serve_params),
+        patch_bytes_f32=f32_patch_bytes,
+        # int8 levels for a_bits <= 7; 8-bit activations stay int32-wide
+        patch_bytes_prequant=(f32_patch_bytes // 4 if quant.a_bits <= 7
+                              else f32_patch_bytes),
+        # passes over the activation tile per layer: quantize(+pack), GEMM,
+        # rowsum+epilogue unfused -> 1 fused pallas_call on TPU
+        hbm_passes_unfused=3, hbm_passes_fused=1))
+    return rows
+
+
+def serve_rows(fast: bool = False, per_layer: bool = True):
+    from repro.core.quant import W1A4, W1A8
+    from repro.models.cnn import alexnet_spec, svhn_cnn_spec
+
+    n = 2 if fast else 3
+    rows = _arch_rows("svhn_cnn", svhn_cnn_spec(32 if fast else 64), 40,
+                      2, W1A4, per_layer, n)
+    if not fast:
+        rows += _arch_rows("alexnet", alexnet_spec(), 112, 1, W1A8,
+                           per_layer=False, n=n)
+    os.makedirs("results", exist_ok=True)
+    with open("results/bench_serve.json", "w") as f:
+        json.dump(rows, f, indent=1, default=str)
+    return rows
+
+
+def main():
+    import sys
+
+    fast = "--fast" in sys.argv
+    print("name,us_per_call,derived")
+    for r in serve_rows(fast=fast):
+        extra = {k: v for k, v in r.items() if k not in ("name", "fused_us")}
+        print(f"{r['name']},{r['fused_us']},{json.dumps(extra)}")
+    print("# full rows -> results/bench_serve.json", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    import sys
+
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    main()

@@ -23,7 +23,14 @@ def main() -> None:
                               intermittency_study, kernel_bench,
                               table1_accuracy, table2_energy_area)
 
+    def serve_fused(fast=False):
+        # deferred so a bench_serve import failure stays one failing row
+        from bench_serve import serve_rows
+        return serve_rows(fast=fast)
+
     fast = "--fast" in sys.argv
+    strict = "--strict" in sys.argv  # exit nonzero if any job errors (CI)
+    failed = []
     jobs = [
         ("table1_accuracy", table1_accuracy,
          dict(steps=20 if fast else 60, train=True)),
@@ -33,6 +40,7 @@ def main() -> None:
         ("table2_energy_area", table2_energy_area, {}),
         ("intermittency", intermittency_study, {}),
         ("kernels", kernel_bench, {}),
+        ("serve_fused", serve_fused, dict(fast=fast)),
     ]
     print("name,us_per_call,derived")
     all_rows = {}
@@ -44,6 +52,7 @@ def main() -> None:
             print(f"{name},{us:.0f},{derived}")
         except Exception as e:  # keep the harness running
             print(f"{name},0,ERROR:{e}")
+            failed.append(name)
     # roofline table (if dry-run results exist)
     try:
         import roofline
@@ -62,6 +71,8 @@ def main() -> None:
     with open(out, "w") as f:
         json.dump(all_rows, f, indent=1, default=str)
     print(f"# full rows -> {out}", file=sys.stderr)
+    if strict and failed:
+        sys.exit(f"jobs failed: {', '.join(failed)}")
 
 
 if __name__ == "__main__":

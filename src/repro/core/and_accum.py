@@ -101,17 +101,44 @@ def bitgemm_int8_planewise(a_lv, w_lv, a_bits, w_bits):
     return out
 
 
+def f32dot_exact(k: int, a_bits: int, w_bits: int) -> bool:
+    """Exactness bound for :func:`bitgemm_f32dot`: every partial sum is an
+    integer inside the fp32 mantissa."""
+    return ((1 << a_bits) - 1) * ((1 << w_bits) - 1) * max(k, 1) < (1 << 24)
+
+
+def bitgemm_f32dot(a_lv: jax.Array, w_lv: jax.Array, a_bits: int, w_bits: int) -> jax.Array:
+    """Float-unit realization of the level GEMM — exact while
+    ``a_max * w_max * K < 2^24``.  On CPU/GPU backends XLA lowers integer
+    matmuls to scalar loops, so routing the exact computation through the
+    float GEMM is the fast path.  The bound is enforced here (shape and
+    bit-widths are static), so an explicit ``engine="f32dot"`` cannot
+    silently round; HIGHEST precision keeps TPU/GPU matmul units from
+    truncating the f32 inputs.
+    """
+    if not f32dot_exact(a_lv.shape[-1], a_bits, w_bits):
+        raise ValueError(
+            f"f32dot engine inexact for a_bits={a_bits}, w_bits={w_bits}, "
+            f"K={a_lv.shape[-1]} (accumulator exceeds the fp32 mantissa); "
+            "use engine='int8'")
+    d = jnp.dot(a_lv.astype(jnp.float32), w_lv.astype(jnp.float32),
+                precision=jax.lax.Precision.HIGHEST)
+    return d.astype(jnp.int32)
+
+
 _ENGINES = {
     "planes": bitgemm_planes,
     "packed": bitgemm_packed,
     "int8": bitgemm_int8,
     "int8_planewise": bitgemm_int8_planewise,
+    "f32dot": bitgemm_f32dot,
 }
 
 
 @partial(jax.jit, static_argnames=("a_bits", "w_bits", "engine"))
 def bitgemm(a_lv, w_lv, a_bits: int, w_bits: int, engine: str = "int8") -> jax.Array:
-    """Integer-level GEMM dispatch. All engines are bit-exact equal."""
+    """Integer-level GEMM dispatch. All engines are bit-exact equal
+    (``f32dot`` raises when its mantissa bound would make it inexact)."""
     return _ENGINES[engine](a_lv, w_lv, a_bits, w_bits)
 
 
@@ -135,10 +162,50 @@ def quant_dense_forward(
 
     a_lv, s_a = activation_levels(a2, a_bits)
     w_lv, s_w, z_w = weight_levels(w, w_bits)
-    acc = _ENGINES[engine](a_lv, w_lv, a_bits, w_bits).astype(a.dtype)
-    rowsum = jnp.sum(a_lv, axis=-1, dtype=jnp.int32).astype(a.dtype)  # EPU pass
-    out = (s_a * s_w) * acc - (s_a * s_w * z_w) * rowsum[:, None]
+    acc = _ENGINES[engine](a_lv, w_lv, a_bits, w_bits)
+    out = dequant_epilogue(acc, a_lv, s_w, z_w, a_bits, a.dtype)  # EPU pass
     return out.reshape(lead + (w.shape[-1],))
+
+
+def dequant_epilogue(acc, a_lv, s_w, z_w, a_bits: int, out_dtype=jnp.float32):
+    """Affine-correction + dequant for the unsigned (DoReFa) level GEMM:
+    ``out = s_a*s_w*acc − s_a*s_w*z_w*rowsum(A)``.  Single source of truth —
+    the fused Pallas kernel mirrors this expression, and the bit-identity
+    tests rely on every unfused path sharing it."""
+    s_a = jnp.asarray(1.0 / ((1 << a_bits) - 1), out_dtype)
+    acc = acc.astype(out_dtype)
+    rowsum = jnp.sum(a_lv, axis=-1, dtype=jnp.int32).astype(out_dtype)
+    return (s_a * s_w) * acc - (s_a * s_w * z_w) * rowsum[:, None]
+
+
+def quant_dense_pre_levels(
+    a_lv: jax.Array, w_lv: jax.Array, s_w, z_w, a_bits: int, w_bits: int,
+    engine: str = "int8", out_dtype=jnp.float32,
+) -> jax.Array:
+    """Unsigned (DoReFa) dense on PRE-QUANTIZED operands: integer activation
+    levels in, int8 weight levels + (s_w, z_w) from the checkpoint in.
+
+    The serve-side core of :func:`quant_dense_forward` with every per-call
+    re-quantization removed; same epilogue expression, so outputs are
+    bit-identical to the re-quantizing path.
+    """
+    acc = _ENGINES[engine](a_lv.astype(jnp.int32), w_lv.astype(jnp.int32),
+                           a_bits, w_bits)
+    return dequant_epilogue(acc, a_lv, s_w, z_w, a_bits, out_dtype)
+
+
+def quant_dense_forward_pre(
+    a: jax.Array, w_lv: jax.Array, s_w, z_w, a_bits: int, w_bits: int,
+    engine: str = "int8",
+) -> jax.Array:
+    """Unsigned quantized dense with pre-quantized weights (float acts in)."""
+    from .quant import activation_levels
+
+    lead = a.shape[:-1]
+    a_lv, _ = activation_levels(a.reshape((-1, a.shape[-1])), a_bits)
+    out = quant_dense_pre_levels(a_lv, w_lv, s_w, z_w, a_bits, w_bits,
+                                 engine=engine)
+    return out.reshape(lead + (w_lv.shape[-1],)).astype(a.dtype)
 
 
 def quant_dense_forward_signed(

@@ -15,16 +15,45 @@ import jax.numpy as jnp
 from .and_accum import quant_dense_forward
 
 
+def _out_hw(h: int, w: int, kh: int, kw: int, stride: int, padding: str):
+    if padding == "SAME":
+        return -(-h // stride), -(-w // stride)
+    return (h - kh) // stride + 1, (w - kw) // stride + 1
+
+
+def im2col_sliced(x: jax.Array, kh: int, kw: int, stride: int = 1,
+                  padding: str = "SAME") -> jax.Array:
+    """Dtype-agnostic im2col via static strided slices (serve path).
+
+    ``conv_general_dilated_patches`` only materializes *float* patches; the
+    pre-quantized serve path extracts patches from the integer activation
+    levels instead (int8, 4x less HBM traffic than f32 patches, for
+    a_bits <= 7; int32 at 8 bits).  Feature layout is (kh, kw, C)-major,
+    matching ``w.reshape(kh*kw*cin, cout)``.
+    """
+    b, h, w, c = x.shape
+    oh, ow = _out_hw(h, w, kh, kw, stride, padding)
+    if padding == "SAME":
+        ph = max((oh - 1) * stride + kh - h, 0)
+        pw = max((ow - 1) * stride + kw - w, 0)
+        x = jnp.pad(x, ((0, 0), (ph // 2, ph - ph // 2),
+                        (pw // 2, pw - pw // 2), (0, 0)))
+    cols = []
+    for dy in range(kh):
+        for dx in range(kw):
+            cols.append(x[:, dy: dy + (oh - 1) * stride + 1: stride,
+                          dx: dx + (ow - 1) * stride + 1: stride, :])
+    return jnp.concatenate(cols, axis=-1)  # (B, OH, OW, kh*kw*C)
+
+
 def im2col(x: jax.Array, kh: int, kw: int, stride: int = 1, padding: str = "SAME"):
     """x (B,H,W,C) -> patches (B,OH,OW,kh*kw*C)."""
     b, h, w, c = x.shape
+    oh, ow = _out_hw(h, w, kh, kw, stride, padding)
     if padding == "SAME":
-        oh, ow = -(-h // stride), -(-w // stride)
         ph = max((oh - 1) * stride + kh - h, 0)
         pw = max((ow - 1) * stride + kw - w, 0)
         x = jnp.pad(x, ((0, 0), (ph // 2, ph - ph // 2), (pw // 2, pw - pw // 2), (0, 0)))
-    else:
-        oh, ow = (h - kh) // stride + 1, (w - kw) // stride + 1
     patches = jax.lax.conv_general_dilated_patches(
         x.transpose(0, 3, 1, 2),  # NCHW
         filter_shape=(kh, kw),
@@ -44,19 +73,89 @@ def quant_conv2d(
     padding: str = "SAME",
     a_bits: int = 4,
     w_bits: int = 1,
-    engine: str = "int8",
+    engine: str | None = None,
 ) -> jax.Array:
-    """Bit-wise conv. x (B,H,W,Cin) in [0,1]; w (kh,kw,Cin,Cout) float."""
+    """Bit-wise conv. x (B,H,W,Cin) in [0,1]; w (kh,kw,Cin,Cout) float.
+
+    Re-quantizes the float weights on every call — the seed serve path, kept
+    as the training-checkpoint entry point and the benchmark baseline.  Use
+    :func:`quant_conv2d_pre` with prequantized weights at serve time.
+    ``engine=None`` dispatches via :func:`repro.kernels.ops.select_engine`.
+    """
+    from repro.kernels import ops  # deferred: kernels layer sits above core
+
     kh, kw, cin, cout = w.shape
     patches = im2col(x, kh, kw, stride, padding)
     b, oh, ow, kdim = patches.shape
     # conv_general_dilated_patches emits channel-major (C, kh, kw) features;
     # align the weight layout to match before flattening to the GEMM axis.
     w2 = w.transpose(2, 0, 1, 3).reshape(cin * kh * kw, cout)
-    out = quant_dense_forward(
-        patches.reshape(-1, kdim), w2, a_bits=a_bits, w_bits=w_bits, engine=engine
-    )
+    if engine is None:
+        engine = ops.select_engine(b * oh * ow, kdim, cout, a_bits, w_bits)
+    if engine in ("fused", "faithful"):  # Pallas serve paths
+        from .prequant import level_dtype
+        from .quant import activation_levels, weight_levels
+
+        w_lv, s_w, z_w = weight_levels(w2, w_bits)
+        w_lv = w_lv.astype(level_dtype(w_bits))
+        # quantize once up front (the fused kernel would otherwise re-run
+        # the clip/round per N-tile revisit of each A tile)
+        p_lv = activation_levels(patches.reshape(-1, kdim), a_bits)[0]
+        out = ops.quant_dense_serve(p_lv.astype(level_dtype(a_bits)), w_lv,
+                                    s_w, z_w, a_bits=a_bits, w_bits=w_bits,
+                                    engine=engine)
+        out = out.astype(x.dtype)
+    else:
+        out = quant_dense_forward(
+            patches.reshape(-1, kdim), w2, a_bits=a_bits, w_bits=w_bits,
+            engine=engine)
     return out.reshape(b, oh, ow, cout)
+
+
+@partial(jax.jit, static_argnames=("kh", "kw", "stride", "padding", "a_bits",
+                                   "w_bits", "engine"))
+def quant_conv2d_pre(
+    x: jax.Array,
+    w_lv: jax.Array,   # (kh*kw*cin, cout) pre-quantized int8 levels
+    s_w: jax.Array,
+    z_w: jax.Array,
+    *,
+    kh: int,
+    kw: int,
+    stride: int = 1,
+    padding: str = "SAME",
+    a_bits: int = 4,
+    w_bits: int = 1,
+    engine: str | None = None,
+) -> jax.Array:
+    """Fused serve conv on PRE-QUANTIZED weights (DESIGN.md §2.3).
+
+    Differences vs :func:`quant_conv2d`, in dataflow order:
+      * no per-call ``weight_levels`` — the int8 levels + (s_w, z_w) come
+        from the checkpoint (the MRAM-resident C_n(W) analogue);
+      * activations are quantized ONCE on the (B,H,W,C) image *before*
+        im2col — kh*kw times less quantization work, and the patches
+        materialize as integer levels instead of f32 (int8, 4x less
+        traffic, for a_bits <= 7; int32 at 8 bits);
+      * the GEMM + rowsum + dequant epilogue run in one fused Pallas pass
+        on TPU (``engine="fused"``), or the dispatcher's pick elsewhere.
+
+    Bit-identical to ``quant_conv2d(..., engine=<same>)``: quantization is
+    elementwise so it commutes with patch extraction, zero padding maps to
+    level 0 either way, and the integer GEMM is order-invariant.
+    """
+    from repro.kernels import ops  # deferred: kernels layer sits above core
+    from .prequant import level_dtype
+    from .quant import activation_levels
+
+    x_lv = activation_levels(x, a_bits)[0].astype(level_dtype(a_bits))
+    patches = im2col_sliced(x_lv, kh, kw, stride, padding)
+    b, oh, ow, kdim = patches.shape
+    cout = w_lv.shape[-1]
+    out = ops.quant_dense_serve(patches.reshape(-1, kdim), w_lv,
+                                s_w, z_w, a_bits=a_bits, w_bits=w_bits,
+                                engine=engine)
+    return out.reshape(b, oh, ow, cout).astype(x.dtype)
 
 
 def conv2d_float(x, w, *, stride: int = 1, padding: str = "SAME"):

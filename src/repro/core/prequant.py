@@ -1,0 +1,70 @@
+"""Serve-time weight pre-quantization — the TPU analogue of MRAM residency.
+
+The paper's engine never re-derives the weight bit-planes: C_n(W) is written
+into the SOT-MRAM sub-array once and stays resident across every inference
+(that residency is also what makes the design power-intermittency resilient —
+the planes are non-volatile).  The seed serve path instead re-ran
+``weight_levels`` on the float weights for every layer of every forward
+call.  This module quantizes all conv/FC weights ONCE at model load into
+int8 levels + per-layer ``(s_w, z_w)``, stored in the params pytree in the
+exact GEMM layout the serve kernels consume.
+
+``prequantize_cnn_params`` is the CNN-side transform consumed by
+:func:`repro.models.cnn.prepare_serve_params`; the transformer-side
+equivalent is :func:`repro.models.layers.prequantize_params`.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax.numpy as jnp
+
+from .quant import QuantConfig, weight_levels
+
+
+def level_dtype(bits: int):
+    """Narrowest signed dtype holding unsigned ``bits``-wide levels."""
+    return jnp.int8 if (1 << bits) - 1 <= 127 else jnp.int32
+
+
+def prequantize_conv_weight(w, w_bits: int):
+    """(kh, kw, cin, cout) float -> ((kh*kw*cin, cout) levels, s_w, z_w).
+
+    The flattened axis is (kh, kw, cin)-major — the layout
+    :func:`repro.core.conv_lowering.im2col_sliced` emits, so serve-time
+    GEMMs consume the stored levels with zero per-call relayout.
+    """
+    lv, s_w, z_w = weight_levels(w, w_bits)
+    return lv.reshape(-1, w.shape[-1]).astype(level_dtype(w_bits)), s_w, z_w
+
+
+def is_fp_layer(spec_entry, quant: QuantConfig) -> bool:
+    return quant.engine == "fp" or quant.w_bits >= 32 or (
+        spec_entry.role in ("first", "last") and quant.first_last_fp)
+
+
+def prequantize_cnn_params(params, spec: Sequence, quant: QuantConfig):
+    """Per-layer serve params: quantized layers swap the float ``w`` for
+    ``{w_lv, s_w, z_w}`` (bias/norm params unchanged); fp layers pass
+    through untouched."""
+    out = []
+    for p, s in zip(params, spec):
+        if is_fp_layer(s, quant):
+            out.append(dict(p))
+            continue
+        w_lv, s_w, z_w = prequantize_conv_weight(p["w"], quant.w_bits)
+        q = {k: v for k, v in p.items() if k != "w"}
+        q.update(w_lv=w_lv, s_w=s_w, z_w=z_w)
+        out.append(q)
+    return out
+
+
+def serve_weight_bytes(params) -> int:
+    """Weight bytes the serve path reads per forward (traffic accounting)."""
+    total = 0
+    for p in params:
+        if "w_lv" in p:
+            total += p["w_lv"].size * p["w_lv"].dtype.itemsize
+        elif "w" in p:
+            total += p["w"].size * p["w"].dtype.itemsize
+    return total

@@ -29,10 +29,13 @@ class QuantConfig:
     g_bits: int = 8
     # Paper (and DoReFa / XNOR-Net) keep first & last layers full precision.
     first_last_fp: bool = True
-    # Engine selection: 'planes' (paper-faithful AND+popcount),
-    # 'packed' (uint32-packed AND+popcount), 'int8' (MXU-mapped, beyond-paper),
-    # 'fp' (no bitwise engine; quantize-dequantize only).
-    engine: str = "int8"
+    # Engine selection: 'auto' (backend/shape dispatch via
+    # repro.kernels.ops.select_engine — fused Pallas on TPU, exact float or
+    # int8 GEMM elsewhere), 'planes' (paper-faithful AND+popcount), 'packed'
+    # (uint32-packed AND+popcount), 'int8' (MXU-mapped, beyond-paper),
+    # 'f32dot' (exact float-unit GEMM), 'fp' (no bitwise engine;
+    # quantize-dequantize only).
+    engine: str = "auto"
 
     @property
     def inference_complexity(self) -> int:

@@ -104,6 +104,17 @@ def tree_shardings(tree, axes_tree, plan, mesh: Mesh, cfg=None):
     raise TypeError(f"mismatched trees: {type(tree)} vs {type(axes_tree)}")
 
 
+def mesh_context(mesh: Mesh):
+    """Portable ``with mesh:`` context across jax versions.
+
+    ``jax.set_mesh`` only exists on newer jax; on older releases the Mesh
+    object is itself the context manager that installs the global mesh.
+    """
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
 def replicated(mesh: Mesh):
     return NamedSharding(mesh, P())
 

@@ -13,14 +13,83 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import bitplane
-from repro.core.and_accum import _nibble_split
+from repro.core.and_accum import (_nibble_split, dequant_epilogue,
+                                  f32dot_exact, quant_dense_pre_levels)
 from .bitgemm import bitgemm_packed_pallas
 from .bitgemm_mxu import int8_matmul_pallas
+from .fused_qgemm import fused_qgemm_pallas
 from .quantpack import quantize_pack_pallas
 
 
 def _interpret() -> bool:
-    return jax.default_backend() == "cpu"
+    # the kernels use TPU memory spaces; interpret everywhere else (CPU/GPU)
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# Engine dispatch — backend/shape-aware selection of the serve GEMM path
+# ---------------------------------------------------------------------------
+
+def select_engine(m: int, k: int, n: int, a_bits: int, w_bits: int,
+                  backend: str | None = None) -> str:
+    """Pick the serve engine for an (m, k) x (k, n) quantized GEMM.
+
+    Returns one of:
+      ``fused``     one-pass Pallas kernel (quantize + MXU matmul + rowsum +
+                    dequant epilogue) — the TPU default;
+      ``faithful``  the tiled VPU AND+popcount Pallas kernel — wins only
+                    for binary, huge-K, skinny-output problems where the
+                    32x K compression beats MXU occupancy;
+      ``int8``      XLA int8 dot on the levels (nibble-split > 7 bits) —
+                    the fallback wherever a Pallas kernel cannot run;
+      ``f32dot``    exact float-unit realization — fastest off-TPU, valid
+                    while the accumulator fits the fp32 mantissa.
+
+    All four are exact; this is purely a performance decision, so the
+    heuristic is deliberately coarse.
+    """
+    backend = backend or jax.default_backend()
+    if backend == "tpu":
+        # binary, huge-K, output tile small enough that the 128x128 MXU
+        # would idle: the 32x K-compressed VPU popcount path wins
+        if a_bits == 1 and w_bits == 1 and m * n <= (1 << 14) and k >= (1 << 15):
+            return "faithful"
+        return "fused"
+    # CPU/GPU: XLA lowers integer matmuls to scalar loops; the float unit is
+    # both faster and exact under the fp32-mantissa bound.
+    return "f32dot" if f32dot_exact(k, a_bits, w_bits) else "int8"
+
+
+def fused_qgemm(a: jax.Array, w_lv: jax.Array, s_w, z_w, *, a_bits: int,
+                w_bits: int, a_is_levels: bool = False,
+                interpret: bool | None = None) -> jax.Array:
+    """Fused serve pipeline kernel (see :mod:`repro.kernels.fused_qgemm`)."""
+    interpret = _interpret() if interpret is None else interpret
+    return fused_qgemm_pallas(a, w_lv, s_w, z_w, a_bits=a_bits, w_bits=w_bits,
+                              a_is_levels=a_is_levels, interpret=interpret)
+
+
+def quant_dense_serve(a_lv: jax.Array, w_lv: jax.Array, s_w, z_w, *,
+                      a_bits: int, w_bits: int,
+                      engine: str | None = None) -> jax.Array:
+    """Serve dense on pre-quantized operands through the selected engine.
+
+    ``a_lv`` (M, K) integer activation levels; ``w_lv`` (K, N) weight levels.
+    ``engine=None`` dispatches via :func:`select_engine`.
+    """
+    m, k = a_lv.shape
+    n = w_lv.shape[1]
+    if engine is None:
+        engine = select_engine(m, k, n, a_bits, w_bits)
+    if engine == "fused":
+        return fused_qgemm(a_lv, w_lv, s_w, z_w, a_bits=a_bits, w_bits=w_bits,
+                           a_is_levels=True)
+    if engine == "faithful":
+        acc = bitgemm_faithful(a_lv.astype(jnp.int32), w_lv.astype(jnp.int32),
+                               a_bits, w_bits)
+        return dequant_epilogue(acc, a_lv, s_w, z_w, a_bits)
+    return quant_dense_pre_levels(a_lv, w_lv, s_w, z_w, a_bits, w_bits,
+                                  engine=engine)
 
 
 def bitgemm_faithful(a_lv: jax.Array, w_lv: jax.Array, a_bits: int, w_bits: int,
@@ -67,7 +136,6 @@ def quant_dense_kernel(a: jax.Array, w: jax.Array, a_bits: int, w_bits: int,
     lead = a.shape[:-1]
     a2 = a.reshape((-1, a.shape[-1]))
     a_lv, packed = quantize_pack(a2, a_bits)
-    s_a = jnp.asarray(1.0 / ((1 << a_bits) - 1), a.dtype)
     w_lv, s_w, z_w = weight_levels(w, w_bits)
     if path == "faithful":
         w_planes = bitplane.decompose_packed(w_lv.T, w_bits, axis=-1)
@@ -76,7 +144,5 @@ def quant_dense_kernel(a: jax.Array, w: jax.Array, a_bits: int, w_bits: int,
         )
     else:
         acc = bitgemm_mxu(a_lv, w_lv, a_bits, w_bits)
-    acc = acc.astype(a.dtype)
-    rowsum = jnp.sum(a_lv, axis=-1, dtype=jnp.int32).astype(a.dtype)
-    out = (s_a * s_w) * acc - (s_a * s_w * z_w) * rowsum[:, None]
+    out = dequant_epilogue(acc, a_lv, s_w, z_w, a_bits, a.dtype)
     return out.reshape(lead + (w.shape[-1],))

@@ -40,6 +40,10 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--quant", default=None, choices=list(PAPER_CONFIGS))
+    ap.add_argument("--prequant", action="store_true",
+                    help="quantize projection weights to int8 levels once at "
+                         "model load (serve reads 4x less weight HBM and "
+                         "skips per-call weight_levels)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -50,6 +54,9 @@ def main():
     qmode = "serve" if args.quant and args.quant != "w32a32" else "train"
 
     params, _ = T.init_lm(jax.random.PRNGKey(0), cfg, SINGLE)
+    if args.prequant and qmode == "serve":
+        from repro.models.layers import prequantize_params
+        params = prequantize_params(params, cfg)
     B, S_p, S_d = args.batch, args.prompt_len, args.new_tokens
     prompts = jnp.asarray(
         lm_batch(0, 0, batch=B, seq=S_p, vocab=cfg.vocab)["tokens"])
@@ -68,7 +75,8 @@ def main():
     gen = jnp.concatenate(toks, axis=1)
     jax.block_until_ready(gen)
     dt = time.perf_counter() - t0
-    print(f"arch={cfg.name} quant={args.quant or 'fp'} engine={qmode}")
+    print(f"arch={cfg.name} quant={args.quant or 'fp'} engine={qmode}"
+          f"{' prequant' if args.prequant and qmode == 'serve' else ''}")
     print(f"generated {B}x{S_d} tokens in {dt:.2f}s "
           f"({B * S_d / dt:.1f} tok/s incl. compile)")
     for b in range(min(B, 2)):

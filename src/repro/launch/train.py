@@ -71,7 +71,8 @@ def main():
                 jax.random.PRNGKey(s), (args.batch, cfg.n_patches, cfg.vit_dim))
         return out
 
-    with jax.set_mesh(mesh):
+    from repro.distributed.sharding import mesh_context
+    with mesh_context(mesh):
         tr.run(bf)
 
 

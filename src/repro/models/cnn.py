@@ -20,7 +20,8 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 
-from repro.core.conv_lowering import conv2d_float, quant_conv2d
+from repro.core.conv_lowering import conv2d_float, quant_conv2d, quant_conv2d_pre
+from repro.core.prequant import is_fp_layer
 from repro.core.quant import (
     QuantConfig,
     quantize_activation,
@@ -84,6 +85,26 @@ def init_cnn(key, spec: Sequence[ConvSpec], dtype=jnp.float32):
     return params, axes
 
 
+def prepare_serve_params(params, spec: Sequence[ConvSpec], quant: QuantConfig):
+    """Quantize all conv/FC weights ONCE at model load for serving.
+
+    Returns a serve-params pytree where every quantized layer stores int8
+    levels + (s_w, z_w) in GEMM layout instead of float weights — the TPU
+    analogue of keeping C_n(W) resident in the SOT-MRAM sub-array.
+    ``cnn_forward(mode="serve")`` detects the pre-quantized entries and runs
+    the fused pipeline; outputs are bit-identical to serving the float
+    params (which re-quantize per call).
+    """
+    from repro.core.prequant import prequantize_cnn_params
+
+    return prequantize_cnn_params(params, spec, quant)
+
+
+def _serve_engine(quant: QuantConfig):
+    """Explicit bitwise-engine override, or None for backend/shape dispatch."""
+    return None if quant.engine == "auto" else quant.engine
+
+
 def _norm_act(x, g, beta, quant: QuantConfig, role: str):
     """Per-channel norm (BN inference form) + bounded activation.
 
@@ -108,14 +129,19 @@ def cnn_forward(params, x, spec: Sequence[ConvSpec], quant: QuantConfig,
         if s.fc and s.k > 1 and h.shape[1] != s.k:
             # FC over whatever spatial extent remains: pool/crop to k x k
             h = jax.image.resize(h, (h.shape[0], s.k, s.k, h.shape[3]), "linear")
-        fp_layer = quant.engine == "fp" or (
-            s.role in ("first", "last") and quant.first_last_fp)
+        fp_layer = is_fp_layer(s, quant)
         if fp_layer:
             h = conv2d_float(h, p["w"], stride=s.stride, padding=pad)
         elif mode == "serve":
-            h = quant_conv2d(h, p["w"], stride=s.stride, padding=pad,
-                             a_bits=quant.a_bits, w_bits=quant.w_bits,
-                             engine="int8")
+            if "w_lv" in p:  # pre-quantized serve params -> fused pipeline
+                h = quant_conv2d_pre(
+                    h, p["w_lv"], p["s_w"], p["z_w"], kh=s.k, kw=s.k,
+                    stride=s.stride, padding=pad, a_bits=quant.a_bits,
+                    w_bits=quant.w_bits, engine=_serve_engine(quant))
+            else:  # float checkpoint: re-quantizes weights per call
+                h = quant_conv2d(h, p["w"], stride=s.stride, padding=pad,
+                                 a_bits=quant.a_bits, w_bits=quant.w_bits,
+                                 engine=_serve_engine(quant))
         else:  # fake-quant STE training conv
             wq = quantize_weight(p["w"], quant.w_bits)
             hq = h  # already quantized by the previous _norm_act

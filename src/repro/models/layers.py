@@ -57,7 +57,8 @@ def qdense(x: jax.Array, w, quant: QuantConfig, *,
         from repro.core.and_accum import quant_dense_forward_signed_pre
         return quant_dense_forward_signed_pre(
             x, w["q"], w["s"], w["z"], quant.a_bits, quant.w_bits,
-            engine="int8", a_scale=_STATIC_ACT_SCALE[0])
+            engine=_signed_engine(x, w["q"].shape[-1], quant),
+            a_scale=_STATIC_ACT_SCALE[0])
     if quant.engine == "fp" or quant.w_bits >= 32 or (
         role in ("first", "last") and quant.first_last_fp
     ):
@@ -67,12 +68,32 @@ def qdense(x: jax.Array, w, quant: QuantConfig, *,
         x2 = x.reshape((-1, x.shape[-1]))
         out = quant_dense_forward_signed(
             x2, w, quant.a_bits, quant.w_bits,
-            engine=quant.engine if quant.engine in ("planes", "packed", "int8") else "int8",
+            engine=_signed_engine(x, w.shape[-1], quant),
         )
         return out.reshape(lead + (w.shape[-1],))
     aq = fake_quant_act_signed(x, quant.a_bits)
     wq = quantize_weight(w, quant.w_bits).astype(x.dtype)
     return aq @ wq
+
+
+def _signed_engine(x, n_out: int, quant: QuantConfig) -> str:
+    """Level-GEMM engine for the signed (affine-corrected) serve path.
+
+    Honors an explicit bitwise engine from the config; otherwise asks the
+    backend/shape dispatcher and maps its fused pick down to ``int8`` (the
+    fused Pallas epilogue implements the unsigned DoReFa correction only).
+    """
+    if quant.engine in ("planes", "packed", "int8", "f32dot"):
+        return quant.engine
+    from repro.kernels.ops import select_engine
+
+    m = 1
+    for d in x.shape[:-1]:
+        m *= d
+    eng = select_engine(m, x.shape[-1], n_out, quant.a_bits, quant.w_bits)
+    # fused/faithful are unsigned-serve Pallas paths; the signed correction
+    # runs on the plain level-GEMM engines
+    return eng if eng in ("planes", "packed", "int8", "f32dot") else "int8"
 
 
 PREQUANT_KEYS = {"wq", "wk", "wv", "wo", "w_in", "w_gate", "w_out"}

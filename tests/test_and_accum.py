@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core import and_accum, bitplane
 from repro.core.quant import activation_levels, activation_levels_signed, weight_levels

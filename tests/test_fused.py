@@ -1,0 +1,177 @@
+"""Fused quantize->bit-GEMM serve pipeline: kernel, prequant, dispatcher.
+
+The fused Pallas kernel must be bit-exact against ``bitgemm_int8`` on the
+integer accumulator (verified by pinning the epilogue scales to (1, 0) so
+the kernel output IS the accumulator) and within fp32 tolerance of the
+``reference_float`` oracle; the pre-quantized CNN serve path must be
+numerically identical to the seed re-quantizing path.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import and_accum
+from repro.core.prequant import level_dtype, prequantize_conv_weight, serve_weight_bytes
+from repro.core.quant import W1A4, W1A8, activation_levels, weight_levels
+from repro.kernels import ops
+from repro.kernels.fused_qgemm import fused_qgemm_pallas
+
+BITS = [(1, 1), (2, 1), (4, 1), (8, 1), (4, 4)]
+SHAPES = [(5, 70, 9), (33, 130, 17), (130, 600, 140)]
+
+
+def _rand_problem(M, K, N, ab, wb):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(M + 13 * ab + wb))
+    a = jax.random.uniform(k1, (M, K), minval=-0.3, maxval=1.3)
+    w = jax.random.normal(k2, (K, N))
+    w_lv, s_w, z_w = weight_levels(w, wb)
+    return a, w, w_lv, s_w, z_w
+
+
+@pytest.mark.parametrize("ab,wb", BITS)
+@pytest.mark.parametrize("M,K,N", SHAPES)
+def test_fused_qgemm_accumulator_bit_exact(M, K, N, ab, wb):
+    """Scales pinned to (s=1, t=0): kernel output == int32 accumulator, which
+    must equal bitgemm_int8 exactly (int32 < 2^24 here, so f32 is lossless)."""
+    a, _, w_lv, _, _ = _rand_problem(M, K, N, ab, wb)
+    one = jnp.asarray(float((1 << ab) - 1), jnp.float32)  # s_a * s_w == 1
+    zero = jnp.zeros((), jnp.float32)
+    out = np.asarray(fused_qgemm_pallas(
+        a, w_lv.astype(level_dtype(wb)), one, zero,
+        a_bits=ab, w_bits=wb, interpret=True))
+    a_lv, _ = activation_levels(a, ab)
+    gold = np.asarray(and_accum.bitgemm_int8(a_lv, w_lv, ab, wb))
+    assert (out == gold.astype(np.float32)).all()
+
+
+@pytest.mark.parametrize("ab,wb", BITS)
+@pytest.mark.parametrize("M,K,N", SHAPES[:2])
+def test_fused_qgemm_vs_reference_float(M, K, N, ab, wb):
+    a, w, w_lv, s_w, z_w = _rand_problem(M, K, N, ab, wb)
+    out = np.asarray(fused_qgemm_pallas(
+        a, w_lv.astype(level_dtype(wb)), s_w, z_w,
+        a_bits=ab, w_bits=wb, interpret=True))
+    ref = np.asarray(and_accum.reference_float(a, w, ab, wb))
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
+    # full-epilogue agreement with the unfused pre-levels path (same f32
+    # expression; only FMA contraction may differ -> ulp tolerance)
+    a_lv, _ = activation_levels(a, ab)
+    exp = np.asarray(and_accum.quant_dense_pre_levels(
+        a_lv, w_lv, s_w, z_w, ab, wb, engine="int8"))
+    np.testing.assert_allclose(out, exp, rtol=1e-5, atol=1e-5)
+
+
+def test_fused_qgemm_level_input_mode():
+    """a_is_levels=True skips in-kernel quantization; same result."""
+    a, _, w_lv, s_w, z_w = _rand_problem(17, 90, 11, 4, 1)
+    a_lv, _ = activation_levels(a, 4)
+    via_float = np.asarray(fused_qgemm_pallas(
+        a, w_lv.astype(jnp.int8), s_w, z_w, a_bits=4, w_bits=1,
+        interpret=True))
+    via_levels = np.asarray(fused_qgemm_pallas(
+        a_lv.astype(jnp.int8), w_lv.astype(jnp.int8), s_w, z_w,
+        a_bits=4, w_bits=1, a_is_levels=True, interpret=True))
+    assert (via_float == via_levels).all()
+
+
+def test_engines_include_f32dot_exact():
+    k1, k2 = jax.random.split(jax.random.PRNGKey(3))
+    a_lv = jax.random.randint(k1, (9, 200), 0, 256).astype(jnp.int32)
+    w_lv = jax.random.randint(k2, (200, 7), 0, 16).astype(jnp.int32)
+    gold = np.asarray(a_lv) @ np.asarray(w_lv)
+    out = np.asarray(and_accum.bitgemm_f32dot(a_lv, w_lv, 8, 4))
+    assert (out == gold).all() and out.dtype == np.int32
+
+
+def test_f32dot_raises_beyond_mantissa_bound():
+    """Explicit engine='f32dot' must be loud, not silently inexact."""
+    a_lv = jnp.ones((2, 300), jnp.int32) * 255
+    w_lv = jnp.ones((300, 2), jnp.int32) * 255
+    with pytest.raises(ValueError, match="f32dot"):
+        and_accum.bitgemm_f32dot(a_lv, w_lv, 8, 8)
+
+
+def test_select_engine_dispatch():
+    # off-TPU: exact float GEMM while the fp32-mantissa bound holds
+    assert ops.select_engine(64, 576, 64, 4, 1, backend="cpu") == "f32dot"
+    assert ops.select_engine(64, 576, 64, 4, 1, backend="gpu") == "f32dot"
+    # bound exceeded (8x8 bits, huge K): exact int8 path
+    assert ops.select_engine(64, 1 << 12, 64, 8, 8, backend="cpu") == "int8"
+    # TPU default: the fused Pallas pipeline
+    assert ops.select_engine(4096, 2304, 256, 4, 1, backend="tpu") == "fused"
+    assert ops.select_engine(4096, 2304, 256, 8, 1, backend="tpu") == "fused"
+    # binary / huge-K / skinny output: faithful packed-VPU Pallas kernel
+    assert ops.select_engine(64, 1 << 16, 64, 1, 1, backend="tpu") == "faithful"
+
+
+def test_quant_dense_serve_engines_agree():
+    a, _, w_lv, s_w, z_w = _rand_problem(21, 128, 10, 4, 2)
+    a_lv, _ = activation_levels(a, 4)
+    w8 = w_lv.astype(jnp.int8)
+    outs = {
+        eng: np.asarray(ops.quant_dense_serve(
+            a_lv.astype(jnp.int8) if eng == "fused" else a_lv, w8, s_w, z_w,
+            a_bits=4, w_bits=2, engine=eng))
+        for eng in ("fused", "int8", "f32dot", "packed", "faithful")
+    }
+    base = outs.pop("int8")
+    for eng, out in outs.items():
+        np.testing.assert_allclose(out, base, rtol=1e-5, atol=1e-5,
+                                   err_msg=eng)
+
+
+def test_quant_conv2d_pre_matches_requant_conv():
+    from repro.core import conv_lowering as cl
+
+    x = jax.random.uniform(jax.random.PRNGKey(5), (2, 9, 9, 3))
+    w = jax.random.normal(jax.random.PRNGKey(6), (3, 3, 3, 5)) * 0.3
+    w_lv, s_w, z_w = prequantize_conv_weight(w, 2)
+    for stride, pad in [(1, "SAME"), (2, "SAME"), (2, "VALID")]:
+        ref = np.asarray(cl.quant_conv2d(x, w, stride=stride, padding=pad,
+                                         a_bits=4, w_bits=2))
+        # the dispatcher's TPU picks must also work through the legacy
+        # (re-quantizing) conv entry point
+        for eng in ("fused", "faithful"):
+            out = np.asarray(cl.quant_conv2d(x, w, stride=stride, padding=pad,
+                                             a_bits=4, w_bits=2, engine=eng))
+            np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5,
+                                       err_msg=f"legacy/{eng}")
+        for eng in (None, "fused", "faithful", "int8"):
+            out = np.asarray(cl.quant_conv2d_pre(
+                x, w_lv, s_w, z_w, kh=3, kw=3, stride=stride, padding=pad,
+                a_bits=4, w_bits=2, engine=eng))
+            np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5,
+                                       err_msg=f"{stride}/{pad}/{eng}")
+
+
+def test_im2col_sliced_matches_float_im2col_contraction():
+    """Layouts differ ((kh,kw,C) vs (C,kh,kw)) but the conv results agree."""
+    from repro.core import conv_lowering as cl
+
+    x = jax.random.uniform(jax.random.PRNGKey(7), (2, 8, 8, 4))
+    w = jax.random.normal(jax.random.PRNGKey(8), (3, 3, 4, 6))
+    p = cl.im2col_sliced(x, 3, 3, 1, "SAME")
+    out = p.reshape(-1, p.shape[-1]) @ w.reshape(-1, 6)
+    ref = cl.conv2d_float(x, w)
+    np.testing.assert_allclose(np.asarray(out).reshape(ref.shape),
+                               np.asarray(ref), rtol=1e-4, atol=1e-4)
+
+
+def test_prepare_serve_params_forward_identical():
+    """prepare_serve_params + serve forward == seed re-quantizing serve."""
+    from repro.models.cnn import (cnn_forward, init_cnn, prepare_serve_params,
+                                  svhn_cnn_spec)
+
+    spec = svhn_cnn_spec(8)
+    params, _ = init_cnn(jax.random.PRNGKey(0), spec)
+    x = jax.random.uniform(jax.random.PRNGKey(1), (2, 16, 16, 3))
+    for q in (W1A4, W1A8):
+        ref = np.asarray(cnn_forward(params, x, spec, q, "serve"))
+        sp = prepare_serve_params(params, spec, q)
+        out = np.asarray(cnn_forward(sp, x, spec, q, "serve"))
+        np.testing.assert_array_equal(out, ref)
+        # first/last stay fp; quantized layers store int8 levels, no float w
+        assert "w" in sp[0] and "w_lv" not in sp[0]
+        assert "w" not in sp[1] and sp[1]["w_lv"].dtype == jnp.int8
+        assert serve_weight_bytes(sp) < serve_weight_bytes(params)
