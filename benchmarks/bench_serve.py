@@ -1,12 +1,23 @@
-"""Serve-path benchmark: fused + pre-quantized pipeline vs the seed path.
+"""Serve-path benchmark: end-to-end CNN forward + transformer decode.
 
-Baseline is the seed ``cnn_forward(mode="serve")`` dataflow: float weights
-re-quantized by ``weight_levels`` on every call, f32 im2col patches, the
-hardwired ``engine="int8"`` GEMM, and a separate rowsum/epilogue pass.
-The optimized path serves from ``prepare_serve_params`` (weights quantized
-once at load) through the backend-dispatched engine
-(``repro.kernels.ops.select_engine``; fused Pallas on TPU, exact f32 GEMM
-on CPU).
+CNN e2e compares three dataflows (layer-level numbers live in
+``bench_conv.py``):
+
+  ``base``      frozen replica of the seed serve forward — float weights
+                re-quantized by ``weight_levels`` every call, f32 im2col
+                patches, hardwired ``engine="int8"`` GEMM, separate
+                rowsum/epilogue pass;
+  ``gemm``      PR-1 pipeline: ``prepare_serve_params`` weights, integer
+                ``im2col_sliced`` patches, dispatched qGEMM (patches still
+                materialize in HBM);
+  ``fused``     this PR's auto dispatch — deep-K spatial convs route to
+                the implicit-GEMM engine (no patch bytes), the rest to the
+                PR-1 engines.
+
+Transformer decode compares the seed per-token Python loop (one jitted
+step re-dispatched from the host, argmax synced per token) against the
+``lax.scan`` generate in ``repro.launch.serve`` — cold (incl. compile) and
+warm reported separately.
 
 Emits the repo's ``name,us_per_call,derived`` CSV plus
 ``results/bench_serve.json``.  Run standalone::
@@ -25,117 +36,190 @@ import time
 import jax
 import jax.numpy as jnp
 
-
-def _timeit(fn, *args, n: int = 3) -> float:
-    out = fn(*args)
-    jax.block_until_ready(out)  # warmup/compile
-    t0 = time.perf_counter()
-    for _ in range(n):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / n * 1e6  # us
+from bench_conv import _conv_oh, _timeit, layer_shapes
 
 
-def _conv_oh(s, h: int) -> int:
-    from repro.core.conv_lowering import _out_hw
+# ---------------------------------------------------------------------------
+# CNN end-to-end
+# ---------------------------------------------------------------------------
 
-    pad = "VALID" if (s.fc or s.k == 1) else "SAME"
-    return max(_out_hw(h, h, s.k, s.k, s.stride, pad)[0], 1)
+def _seed_forward(params, x, spec, quant):
+    """The seed serve dataflow, frozen as the benchmark baseline: per-call
+    ``weight_levels`` + f32 ``conv_general_dilated_patches`` im2col +
+    ``engine="int8"`` GEMM (``quant_conv2d``), with the same norm/pool
+    structure as ``cnn_forward``."""
+    from repro.core.conv_lowering import conv2d_float, quant_conv2d
+    from repro.core.prequant import is_fp_layer
+    from repro.models.cnn import _norm_act
 
-
-def _layer_shapes(spec, img: int):
-    """Replay cnn_forward's spatial bookkeeping: input (h, w) per layer."""
-    h = img
-    shapes = []
-    for s in spec:
-        if s.fc and s.k > 1 and h != s.k:
-            h = s.k
-        shapes.append(h)
-        h = _conv_oh(s, h)
+    h = x
+    for i, (p, s) in enumerate(zip(params, spec)):
+        pad = "VALID" if (s.fc or s.k == 1) else "SAME"
+        if s.fc and s.k > 1 and h.shape[1] != s.k:
+            h = jax.image.resize(h, (h.shape[0], s.k, s.k, h.shape[3]),
+                                 "linear")
+        if is_fp_layer(s, quant):
+            h = conv2d_float(h, p["w"], stride=s.stride, padding=pad)
+        else:
+            h = quant_conv2d(h, p["w"], stride=s.stride, padding=pad,
+                             a_bits=quant.a_bits, w_bits=quant.w_bits,
+                             engine="int8")
+        h = h + p["b"]
+        if i < len(spec) - 1:
+            h = _norm_act(h, p["g"], p["beta"], quant, s.role)
         if s.pool:
-            h //= 2
-    return shapes
+            h = jax.lax.reduce_window(
+                h, 0.0, jax.lax.add, (1, 2, 2, 1), (1, 2, 2, 1), "VALID") / 4.0
+    return jnp.mean(h, axis=(1, 2))
 
 
-def _arch_rows(name, spec, img: int, batch: int, quant, per_layer: bool, n: int):
-    from repro.core.conv_lowering import quant_conv2d, quant_conv2d_pre
-    from repro.core.prequant import is_fp_layer, serve_weight_bytes
-    from repro.kernels.ops import select_engine
+def _arch_rows(name, spec, img: int, batch: int, quant, n: int):
+    from repro.core.prequant import is_fp_layer, level_dtype, serve_weight_bytes
     from repro.models.cnn import cnn_forward, init_cnn, prepare_serve_params
 
-    seed_quant = dataclasses.replace(quant, engine="int8")   # seed serve path
     auto_quant = dataclasses.replace(quant, engine="auto")
+    # the PR-1 engine pick with the conv-aware (implicit) dispatch masked:
+    # f32dot is what select_engine returns off-TPU for every layer here
+    gemm_quant = dataclasses.replace(quant, engine="f32dot")
     params, _ = init_cnn(jax.random.PRNGKey(0), spec)
     serve_params = prepare_serve_params(params, spec, auto_quant)
     x = jax.random.uniform(jax.random.PRNGKey(1), (batch, img, img, 3))
 
-    rows = []
-    if per_layer:
-        for i, (s, h) in enumerate(zip(spec, _layer_shapes(spec, img))):
-            if is_fp_layer(s, quant):
-                continue
-            pad = "VALID" if (s.fc or s.k == 1) else "SAME"
-            xi = jax.random.uniform(jax.random.PRNGKey(i), (batch, h, h, s.cin))
-            p, sp = params[i], serve_params[i]
-            base_us = _timeit(
-                lambda xi=xi, p=p, s=s, pad=pad: quant_conv2d(
-                    xi, p["w"], stride=s.stride, padding=pad,
-                    a_bits=quant.a_bits, w_bits=quant.w_bits, engine="int8"),
-                n=n)
-            pre_us = _timeit(
-                lambda xi=xi, sp=sp, s=s, pad=pad: quant_conv2d_pre(
-                    xi, sp["w_lv"], sp["s_w"], sp["z_w"], kh=s.k, kw=s.k,
-                    stride=s.stride, padding=pad, a_bits=quant.a_bits,
-                    w_bits=quant.w_bits),
-                n=n)
-            oh = _conv_oh(s, h)
-            eng = select_engine(batch * oh * oh, s.k * s.k * s.cin, s.cout,
-                                quant.a_bits, quant.w_bits)
-            rows.append(dict(
-                name=f"{name}_L{i}", kind="layer", shape=f"{h}x{h}x{s.cin}",
-                k=s.k, cout=s.cout, engine=eng,
-                base_us=round(base_us), fused_us=round(pre_us),
-                speedup=round(base_us / pre_us, 2)))
-
-    base_fwd = jax.jit(
-        lambda x: cnn_forward(params, x, spec, seed_quant, "serve"))
-    fused_fwd = jax.jit(
+    base_fwd = jax.jit(lambda x: _seed_forward(params, x, spec, quant))
+    gemm_fwd = jax.jit(
+        lambda x: cnn_forward(serve_params, x, spec, gemm_quant, "serve"))
+    auto_fwd = jax.jit(
         lambda x: cnn_forward(serve_params, x, spec, auto_quant, "serve"))
     base_us = _timeit(base_fwd, x, n=n)
-    fused_us = _timeit(fused_fwd, x, n=n)
-    n_q = sum(0 if is_fp_layer(s, quant) else 1 for s in spec)
-    f32_patch_bytes = sum(
-        4 * batch * _conv_oh(s, h) ** 2 * s.k * s.k * s.cin
-        for s, h in zip(spec, _layer_shapes(spec, img))
-        if not is_fp_layer(s, quant))
-    rows.append(dict(
-        name=f"{name}_e2e", kind="e2e", batch=batch, img=img, quant=quant.tag(),
-        base_us=round(base_us), fused_us=round(fused_us),
-        speedup=round(base_us / fused_us, 2),
-        # eliminated per-call work (the fusion accounting, DESIGN.md §2.3)
-        weight_levels_calls_eliminated=n_q,
+    gemm_us = _timeit(gemm_fwd, x, n=n)
+    auto_us = _timeit(auto_fwd, x, n=n)
+
+    lvl = jax.numpy.zeros((), level_dtype(quant.a_bits)).dtype.itemsize
+    q_layers = [(s, h) for s, h in zip(spec, layer_shapes(spec, img))
+                if not is_fp_layer(s, quant)]
+    patch_elems = sum(batch * _conv_oh(s, h) ** 2 * s.k * s.k * s.cin
+                      for s, h in q_layers)
+    # patches that STILL materialize under auto dispatch: only layers the
+    # dispatcher keeps on a GEMM engine contribute (implicit-routed layers
+    # materialize zero patch bytes)
+    from repro.kernels.ops import ConvShape, select_engine
+    residual_patch_elems = sum(
+        batch * _conv_oh(s, h) ** 2 * s.k * s.k * s.cin
+        for s, h in q_layers
+        if select_engine(
+            batch * _conv_oh(s, h) ** 2, s.k * s.k * s.cin, s.cout,
+            quant.a_bits, quant.w_bits,
+            conv=ConvShape(h, h, s.k, s.k, s.stride,
+                           "VALID" if (s.fc or s.k == 1) else "SAME"),
+        ) != "implicit")
+    return [dict(
+        name=f"{name}_e2e", kind="e2e", batch=batch, img=img,
+        quant=quant.tag(),
+        base_us=round(base_us), gemm_us=round(gemm_us),
+        fused_us=round(auto_us),
+        speedup=round(base_us / auto_us, 2),
+        speedup_vs_gemm=round(gemm_us / auto_us, 2),
         weight_bytes_fp32=serve_weight_bytes(params),
         weight_bytes_prequant=serve_weight_bytes(serve_params),
-        patch_bytes_f32=f32_patch_bytes,
-        # int8 levels for a_bits <= 7; 8-bit activations stay int32-wide
-        patch_bytes_prequant=(f32_patch_bytes // 4 if quant.a_bits <= 7
-                              else f32_patch_bytes),
-        # passes over the activation tile per layer: quantize(+pack), GEMM,
-        # rowsum+epilogue unfused -> 1 fused pallas_call on TPU
-        hbm_passes_unfused=3, hbm_passes_fused=1))
-    return rows
+        # materialized patch traffic: f32 seed -> integer PR-1 -> residual
+        # under auto dispatch (implicit-routed layers contribute zero)
+        patch_bytes_f32=4 * patch_elems,
+        patch_bytes_prequant=lvl * patch_elems,
+        patch_bytes_auto_residual=lvl * residual_patch_elems,
+        patch_byte_reduction=round(
+            lvl * patch_elems / max(lvl * residual_patch_elems, 1), 1),
+        hbm_passes_unfused=3, hbm_passes_fused=1)]
 
 
-def serve_rows(fast: bool = False, per_layer: bool = True):
+# ---------------------------------------------------------------------------
+# Transformer decode: python-loop (seed) vs lax.scan generate
+# ---------------------------------------------------------------------------
+
+def _loop_decode(params, cfg, plan, prompts, new_tokens: int, qmode: str,
+                 prefill=None, step=None):
+    """The seed decode: host loop re-dispatching one jitted step per token,
+    with a device->host argmax sync in between.  Pass pre-built ``prefill``
+    / ``step`` so the warm measurement reuses the jit cache (like a
+    long-lived server would); the prefill is jitted the same way as the
+    scan path's, so warm loop-vs-scan isolates the DECODE dispatch gap."""
+    from repro.launch.serve import make_prefill, widen_cache
+    from repro.models import transformer as T
+
+    B, S_p = prompts.shape
+    prefill = prefill or make_prefill(params, cfg, plan, qmode)
+    step = step or jax.jit(
+        lambda c, t, p: T.decode_step(params, c, t, p, cfg, plan,
+                                      qmode=qmode))
+    t0 = time.perf_counter()
+    logits, cache = prefill(prompts)
+    cache = widen_cache(cache, S_p, S_p + new_tokens)
+    tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+    toks = [tok]
+    for t in range(new_tokens - 1):
+        lg, cache = step(cache, tok, S_p + t)
+        tok = jnp.argmax(lg[:, -1:], -1).astype(jnp.int32)
+        toks.append(tok)
+    gen = jnp.concatenate(toks, axis=1)
+    jax.block_until_ready(gen)
+    return gen, time.perf_counter() - t0, prefill, step
+
+
+def decode_rows(fast: bool = False):
+    from repro.configs import SINGLE, get_config
+    from repro.core.quant import PAPER_CONFIGS
+    from repro.data.synthetic import lm_batch
+    from repro.launch.serve import make_generate, make_prefill, serve_once
+    from repro.models import transformer as T
+
+    cfg = dataclasses.replace(get_config("phi3-mini-3.8b").smoke(),
+                              quant=PAPER_CONFIGS["w1a8"])
+    qmode = "serve"
+    B, S_p, S_d = 2, 8, 8 if fast else 16
+    params, _ = T.init_lm(jax.random.PRNGKey(0), cfg, SINGLE)
+    prompts = jnp.asarray(
+        lm_batch(0, 0, batch=B, seq=S_p, vocab=cfg.vocab)["tokens"])
+
+    loop_gen, loop_cold, pf, step = _loop_decode(params, cfg, SINGLE,
+                                                 prompts, S_d, qmode)
+    _, loop_warm, _, _ = _loop_decode(params, cfg, SINGLE, prompts, S_d,
+                                      qmode, prefill=pf, step=step)
+
+    prefill_fn = make_prefill(params, cfg, SINGLE, qmode)
+    generate_fn = make_generate(params, cfg, SINGLE, qmode, S_p, S_d)
+    scan_gen, scan_cold = serve_once(params, cfg, SINGLE, prompts, S_d,
+                                     qmode, prefill_fn, generate_fn)
+    _, scan_warm = serve_once(params, cfg, SINGLE, prompts, S_d, qmode,
+                              prefill_fn, generate_fn)
+    # the two paths are separately compiled float programs, so an argmax
+    # near-tie can legitimately flip a token (ulp-level logit reordering);
+    # report the comparison instead of asserting it so the --strict CI
+    # gate cannot flake on it
+    tokens_match = bool((jnp.asarray(scan_gen) == jnp.asarray(loop_gen)).all())
+    return [dict(
+        name="decode_scan", kind="decode", arch=cfg.name, batch=B,
+        prompt_len=S_p, new_tokens=S_d, quant="w1a8",
+        tokens_match_loop=tokens_match,
+        loop_cold_us=round(loop_cold * 1e6),
+        loop_warm_us=round(loop_warm * 1e6),
+        scan_cold_us=round(scan_cold * 1e6),
+        scan_warm_us=round(scan_warm * 1e6),
+        tok_s_cold=round(B * S_d / scan_cold, 1),
+        tok_s_warm=round(B * S_d / scan_warm, 1),
+        warm_speedup=round(loop_warm / scan_warm, 2))]
+
+
+def serve_rows(fast: bool = False):
     from repro.core.quant import W1A4, W1A8
     from repro.models.cnn import alexnet_spec, svhn_cnn_spec
 
-    n = 2 if fast else 3
+    # e2e latencies are tens of ms; n=8 keeps scheduler noise out of the
+    # speedup ratios (n=3 flipped signs run-to-run on a busy host)
+    n = 2 if fast else 8
     rows = _arch_rows("svhn_cnn", svhn_cnn_spec(32 if fast else 64), 40,
-                      2, W1A4, per_layer, n)
+                      2, W1A4, n)
     if not fast:
-        rows += _arch_rows("alexnet", alexnet_spec(), 112, 1, W1A8,
-                           per_layer=False, n=n)
+        rows += _arch_rows("alexnet", alexnet_spec(), 112, 1, W1A8, n)
+    rows += decode_rows(fast=fast)
     os.makedirs("results", exist_ok=True)
     with open("results/bench_serve.json", "w") as f:
         json.dump(rows, f, indent=1, default=str)
@@ -148,8 +232,9 @@ def main():
     fast = "--fast" in sys.argv
     print("name,us_per_call,derived")
     for r in serve_rows(fast=fast):
-        extra = {k: v for k, v in r.items() if k not in ("name", "fused_us")}
-        print(f"{r['name']},{r['fused_us']},{json.dumps(extra)}")
+        us = r.get("fused_us", r.get("scan_warm_us"))
+        extra = {k: v for k, v in r.items() if k not in ("name",)}
+        print(f"{r['name']},{us},{json.dumps(extra)}")
     print("# full rows -> results/bench_serve.json", file=sys.stderr)
 
 

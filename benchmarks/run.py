@@ -28,6 +28,10 @@ def main() -> None:
         from bench_serve import serve_rows
         return serve_rows(fast=fast)
 
+    def conv_implicit(fast=False):
+        from bench_conv import conv_rows
+        return conv_rows(fast=fast)
+
     fast = "--fast" in sys.argv
     strict = "--strict" in sys.argv  # exit nonzero if any job errors (CI)
     failed = []
@@ -40,6 +44,7 @@ def main() -> None:
         ("table2_energy_area", table2_energy_area, {}),
         ("intermittency", intermittency_study, {}),
         ("kernels", kernel_bench, {}),
+        ("conv_implicit", conv_implicit, dict(fast=fast)),
         ("serve_fused", serve_fused, dict(fast=fast)),
     ]
     print("name,us_per_call,derived")

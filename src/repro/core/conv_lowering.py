@@ -21,6 +21,22 @@ def _out_hw(h: int, w: int, kh: int, kw: int, stride: int, padding: str):
     return (h - kh) // stride + 1, (w - kw) // stride + 1
 
 
+def pad_split(h: int, w: int, kh: int, kw: int, stride: int, padding: str):
+    """((top, bottom), (left, right)) zero-pad — the SAME split SINGLE SOURCE.
+
+    Every conv lowering (both im2col variants here, both implicit-GEMM
+    realizations in ``kernels/conv_implicit.py``) must place padding via
+    this function: the bit-identity contract between the patch-GEMM and
+    implicit engines holds only while they agree on where the zeros go.
+    """
+    if padding == "VALID":
+        return (0, 0), (0, 0)
+    oh, ow = _out_hw(h, w, kh, kw, stride, padding)
+    ph = max((oh - 1) * stride + kh - h, 0)
+    pw = max((ow - 1) * stride + kw - w, 0)
+    return (ph // 2, ph - ph // 2), (pw // 2, pw - pw // 2)
+
+
 def im2col_sliced(x: jax.Array, kh: int, kw: int, stride: int = 1,
                   padding: str = "SAME") -> jax.Array:
     """Dtype-agnostic im2col via static strided slices (serve path).
@@ -34,10 +50,8 @@ def im2col_sliced(x: jax.Array, kh: int, kw: int, stride: int = 1,
     b, h, w, c = x.shape
     oh, ow = _out_hw(h, w, kh, kw, stride, padding)
     if padding == "SAME":
-        ph = max((oh - 1) * stride + kh - h, 0)
-        pw = max((ow - 1) * stride + kw - w, 0)
-        x = jnp.pad(x, ((0, 0), (ph // 2, ph - ph // 2),
-                        (pw // 2, pw - pw // 2), (0, 0)))
+        x = jnp.pad(x, ((0, 0),) + pad_split(h, w, kh, kw, stride, padding)
+                    + ((0, 0),))
     cols = []
     for dy in range(kh):
         for dx in range(kw):
@@ -51,9 +65,8 @@ def im2col(x: jax.Array, kh: int, kw: int, stride: int = 1, padding: str = "SAME
     b, h, w, c = x.shape
     oh, ow = _out_hw(h, w, kh, kw, stride, padding)
     if padding == "SAME":
-        ph = max((oh - 1) * stride + kh - h, 0)
-        pw = max((ow - 1) * stride + kw - w, 0)
-        x = jnp.pad(x, ((0, 0), (ph // 2, ph - ph // 2), (pw // 2, pw - pw // 2), (0, 0)))
+        x = jnp.pad(x, ((0, 0),) + pad_split(h, w, kh, kw, stride, padding)
+                    + ((0, 0),))
     patches = jax.lax.conv_general_dilated_patches(
         x.transpose(0, 3, 1, 2),  # NCHW
         filter_shape=(kh, kw),
@@ -134,11 +147,13 @@ def quant_conv2d_pre(
       * no per-call ``weight_levels`` — the int8 levels + (s_w, z_w) come
         from the checkpoint (the MRAM-resident C_n(W) analogue);
       * activations are quantized ONCE on the (B,H,W,C) image *before*
-        im2col — kh*kw times less quantization work, and the patches
-        materialize as integer levels instead of f32 (int8, 4x less
-        traffic, for a_bits <= 7; int32 at 8 bits);
-      * the GEMM + rowsum + dequant epilogue run in one fused Pallas pass
-        on TPU (``engine="fused"``), or the dispatcher's pick elsewhere.
+        patch extraction — kh*kw times less quantization work;
+      * the conv dispatches via :func:`repro.kernels.ops.quant_conv_serve`:
+        the ``implicit`` engine (auto-picked for deep-K spatial convs)
+        extracts patches in-register — nothing kh*kw-amplified ever
+        touches HBM — while the GEMM engines lower through
+        ``im2col_sliced`` integer patches (int8, 4x less traffic than f32
+        patches, for a_bits <= 7; int32 at 8 bits).
 
     Bit-identical to ``quant_conv2d(..., engine=<same>)``: quantization is
     elementwise so it commutes with patch extraction, zero padding maps to
@@ -149,13 +164,10 @@ def quant_conv2d_pre(
     from .quant import activation_levels
 
     x_lv = activation_levels(x, a_bits)[0].astype(level_dtype(a_bits))
-    patches = im2col_sliced(x_lv, kh, kw, stride, padding)
-    b, oh, ow, kdim = patches.shape
-    cout = w_lv.shape[-1]
-    out = ops.quant_dense_serve(patches.reshape(-1, kdim), w_lv,
-                                s_w, z_w, a_bits=a_bits, w_bits=w_bits,
-                                engine=engine)
-    return out.reshape(b, oh, ow, cout).astype(x.dtype)
+    out = ops.quant_conv_serve(x_lv, w_lv, s_w, z_w, kh=kh, kw=kw,
+                               stride=stride, padding=padding,
+                               a_bits=a_bits, w_bits=w_bits, engine=engine)
+    return out.astype(x.dtype)
 
 
 def conv2d_float(x, w, *, stride: int = 1, padding: str = "SAME"):

@@ -7,6 +7,7 @@ nibble-splitting for >7-bit operands on the MXU kernel.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 
 import jax
@@ -17,6 +18,8 @@ from repro.core.and_accum import (_nibble_split, dequant_epilogue,
                                   f32dot_exact, quant_dense_pre_levels)
 from .bitgemm import bitgemm_packed_pallas
 from .bitgemm_mxu import int8_matmul_pallas
+from .conv_implicit import (conv_implicit_pallas, conv_implicit_xla,
+                            implicit_xla_exact)
 from .fused_qgemm import fused_qgemm_pallas
 from .quantpack import quantize_pack_pallas
 
@@ -30,13 +33,47 @@ def _interpret() -> bool:
 # Engine dispatch — backend/shape-aware selection of the serve GEMM path
 # ---------------------------------------------------------------------------
 
+@dataclasses.dataclass(frozen=True)
+class ConvShape:
+    """Static conv geometry for conv-aware engine selection."""
+    h: int
+    w: int
+    kh: int
+    kw: int
+    stride: int
+    padding: str
+
+    @property
+    def out_hw(self) -> tuple[int, int]:
+        from repro.core.conv_lowering import _out_hw
+        return _out_hw(self.h, self.w, self.kh, self.kw, self.stride,
+                       self.padding)
+
+    @property
+    def read_amplification(self) -> float:
+        """im2col HBM blowup: patch elements per input element (~kh*kw)."""
+        oh, ow = self.out_hw
+        return self.kh * self.kw * oh * ow / max(self.h * self.w, 1)
+
+
+# implicit engine eligibility: the kernel supports these strides, and only
+# K-axes at least this deep amortize the halo'd-tile bookkeeping (a 1x1
+# conv has no patch blowup — im2col is the identity there)
+IMPLICIT_STRIDES = (1, 2)
+IMPLICIT_KDIM_MIN = 512
+
+
 def select_engine(m: int, k: int, n: int, a_bits: int, w_bits: int,
-                  backend: str | None = None) -> str:
+                  backend: str | None = None,
+                  conv: ConvShape | None = None) -> str:
     """Pick the serve engine for an (m, k) x (k, n) quantized GEMM.
 
     Returns one of:
       ``fused``     one-pass Pallas kernel (quantize + MXU matmul + rowsum +
                     dequant epilogue) — the TPU default;
+      ``implicit``  implicit-GEMM conv (``conv`` geometry required): patch
+                    extraction in-register, no im2col tensor in HBM —
+                    Pallas kernel sweep on TPU, exact direct conv off-TPU;
       ``faithful``  the tiled VPU AND+popcount Pallas kernel — wins only
                     for binary, huge-K, skinny-output problems where the
                     32x K compression beats MXU occupancy;
@@ -45,18 +82,35 @@ def select_engine(m: int, k: int, n: int, a_bits: int, w_bits: int,
       ``f32dot``    exact float-unit realization — fastest off-TPU, valid
                     while the accumulator fits the fp32 mantissa.
 
-    All four are exact; this is purely a performance decision, so the
+    All five are exact; this is purely a performance decision, so the
     heuristic is deliberately coarse.
     """
     backend = backend or jax.default_backend()
+    impl_ok = (conv is not None and conv.kh * conv.kw > 1
+               and conv.stride in IMPLICIT_STRIDES
+               and conv.padding in ("SAME", "VALID")
+               # no blowup, nothing to save: full-window FC-as-conv layers
+               # (oh=ow=1, amplification 1) stay on the dense fused GEMM
+               and conv.read_amplification >= 4.0)
     if backend == "tpu":
+        if impl_ok and k >= IMPLICIT_KDIM_MIN:
+            return "implicit"
         # binary, huge-K, output tile small enough that the 128x128 MXU
         # would idle: the 32x K-compressed VPU popcount path wins
         if a_bits == 1 and w_bits == 1 and m * n <= (1 << 14) and k >= (1 << 15):
             return "faithful"
         return "fused"
     # CPU/GPU: XLA lowers integer matmuls to scalar loops; the float unit is
-    # both faster and exact under the fp32-mantissa bound.
+    # both faster and exact under the fp32-mantissa bound.  The implicit
+    # direct conv wins (measured, benchmarks/bench_conv.py) once there is
+    # enough amplified traffic to pay back the conv-loop overhead:
+    # m * amplification ~ the patch elements saved per Cin*Cout pair.
+    # Tiny-spatial layers (alexnet's 7x7 tail) stay on the patch GEMM, and
+    # K beyond the off-TPU realization's exactness bound falls back to the
+    # int8 engine (conv_implicit_xla would raise there).
+    if (impl_ok and m * conv.read_amplification >= 2500
+            and implicit_xla_exact(k, a_bits, w_bits)):
+        return "implicit"
     return "f32dot" if f32dot_exact(k, a_bits, w_bits) else "int8"
 
 
@@ -90,6 +144,44 @@ def quant_dense_serve(a_lv: jax.Array, w_lv: jax.Array, s_w, z_w, *,
         return dequant_epilogue(acc, a_lv, s_w, z_w, a_bits)
     return quant_dense_pre_levels(a_lv, w_lv, s_w, z_w, a_bits, w_bits,
                                   engine=engine)
+
+
+def quant_conv_serve(x_lv: jax.Array, w_lv: jax.Array, s_w, z_w, *,
+                     kh: int, kw: int, stride: int = 1, padding: str = "SAME",
+                     a_bits: int, w_bits: int,
+                     engine: str | None = None) -> jax.Array:
+    """Serve conv on pre-quantized operands through the selected engine.
+
+    ``x_lv`` (B, H, W, Cin) integer activation levels; ``w_lv``
+    (kh*kw*Cin, Cout) weight levels in (kh, kw, cin)-major layout.  The
+    conv-native entry point: ``engine="implicit"`` never materializes
+    patches (Pallas implicit-GEMM sweep on TPU, exact direct conv
+    elsewhere); every other engine lowers through ``im2col_sliced`` to
+    :func:`quant_dense_serve`.  All engines are bit-identical.
+    """
+    from repro.core.conv_lowering import _out_hw, im2col_sliced
+
+    b, h, w, cin = x_lv.shape
+    cout = w_lv.shape[1]
+    oh, ow = _out_hw(h, w, kh, kw, stride, padding)
+    if engine is None:
+        engine = select_engine(
+            b * oh * ow, kh * kw * cin, cout, a_bits, w_bits,
+            conv=ConvShape(h, w, kh, kw, stride, padding))
+    if engine == "implicit":
+        if jax.default_backend() == "tpu":
+            return conv_implicit_pallas(
+                x_lv, w_lv, s_w, z_w, kh=kh, kw=kw, stride=stride,
+                padding=padding, a_bits=a_bits, w_bits=w_bits,
+                interpret=False)
+        return conv_implicit_xla(
+            x_lv, w_lv, s_w, z_w, kh=kh, kw=kw, stride=stride,
+            padding=padding, a_bits=a_bits, w_bits=w_bits)
+    patches = im2col_sliced(x_lv, kh, kw, stride, padding)
+    out = quant_dense_serve(patches.reshape(-1, kh * kw * cin), w_lv,
+                            s_w, z_w, a_bits=a_bits, w_bits=w_bits,
+                            engine=engine)
+    return out.reshape(b, oh, ow, cout)
 
 
 def bitgemm_faithful(a_lv: jax.Array, w_lv: jax.Array, a_bits: int, w_bits: int,

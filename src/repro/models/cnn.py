@@ -7,8 +7,11 @@
   energy rows (Fig. 8b, Table II).
 
 Every quantized conv runs the AND-Accumulation engine via
-:func:`repro.core.conv_lowering.quant_conv2d` (inference/serve mode) or a
-fake-quant STE conv (training mode).
+:func:`repro.core.conv_lowering.quant_conv2d_pre` (inference/serve mode —
+weights pre-quantized at load by :func:`prepare_serve_params`, or on the
+fly for float checkpoints; the engine dispatcher picks the patch-free
+implicit-GEMM kernel for deep-K spatial convs) or a fake-quant STE conv
+(training mode).
 """
 from __future__ import annotations
 
@@ -20,8 +23,8 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 
-from repro.core.conv_lowering import conv2d_float, quant_conv2d, quant_conv2d_pre
-from repro.core.prequant import is_fp_layer
+from repro.core.conv_lowering import conv2d_float, quant_conv2d_pre
+from repro.core.prequant import is_fp_layer, prequantize_conv_weight
 from repro.core.quant import (
     QuantConfig,
     quantize_activation,
@@ -133,15 +136,16 @@ def cnn_forward(params, x, spec: Sequence[ConvSpec], quant: QuantConfig,
         if fp_layer:
             h = conv2d_float(h, p["w"], stride=s.stride, padding=pad)
         elif mode == "serve":
-            if "w_lv" in p:  # pre-quantized serve params -> fused pipeline
-                h = quant_conv2d_pre(
-                    h, p["w_lv"], p["s_w"], p["z_w"], kh=s.k, kw=s.k,
-                    stride=s.stride, padding=pad, a_bits=quant.a_bits,
-                    w_bits=quant.w_bits, engine=_serve_engine(quant))
-            else:  # float checkpoint: re-quantizes weights per call
-                h = quant_conv2d(h, p["w"], stride=s.stride, padding=pad,
-                                 a_bits=quant.a_bits, w_bits=quant.w_bits,
-                                 engine=_serve_engine(quant))
+            if "w_lv" in p:  # pre-quantized serve params (prepare_serve_params)
+                w_lv, s_w, z_w = p["w_lv"], p["s_w"], p["z_w"]
+            else:  # float checkpoint: quantize weights on the fly — the
+                # conv itself still runs the patch-free fused/implicit
+                # pipeline (the f32-im2col serve path is gone)
+                w_lv, s_w, z_w = prequantize_conv_weight(p["w"], quant.w_bits)
+            h = quant_conv2d_pre(
+                h, w_lv, s_w, z_w, kh=s.k, kw=s.k,
+                stride=s.stride, padding=pad, a_bits=quant.a_bits,
+                w_bits=quant.w_bits, engine=_serve_engine(quant))
         else:  # fake-quant STE training conv
             wq = quantize_weight(p["w"], quant.w_bits)
             hq = h  # already quantized by the previous _norm_act

@@ -1,0 +1,249 @@
+"""Implicit-GEMM conv: bit-identity vs the im2col+qGEMM path, engine
+dispatch, and the ``im2col_sliced`` edge cases the implicit kernel must
+reproduce (stride-2 SAME on odd dims, VALID, rectangular kernels).
+
+The contract under test: patch extraction in-register (Pallas kernel) or
+as a direct convolution (XLA realization) is *bit-identical* — not merely
+close — to materializing ``im2col_sliced`` patches and running the fused
+qGEMM, across every paper bit-width, both strides, and both paddings.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.conv_lowering import im2col, im2col_sliced, quant_conv2d_pre
+from repro.core.prequant import level_dtype, prequantize_conv_weight
+from repro.core.quant import W1A4, activation_levels
+from repro.kernels.conv_implicit import conv_implicit_pallas, conv_implicit_xla
+from repro.kernels.ops import ConvShape, quant_conv_serve, select_engine
+
+BITS = [(1, 1), (2, 1), (4, 1), (8, 1), (4, 4)]
+
+
+def _conv_problem(ab, wb, H=9, W=9, kh=3, kw=3, cin=5, cout=7, B=2):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(ab * 31 + wb + kh))
+    x = jax.random.uniform(k1, (B, H, W, cin), minval=-0.2, maxval=1.2)
+    w = jax.random.normal(k2, (kh, kw, cin, cout))
+    w_lv, s_w, z_w = prequantize_conv_weight(w, wb)
+    x_lv = activation_levels(x, ab)[0].astype(level_dtype(ab))
+    return x, x_lv, w_lv, s_w, z_w
+
+
+# ---------------------------------------------------------------------------
+# bit-identity: implicit (both realizations) vs the patch-GEMM path
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("ab,wb", BITS)
+@pytest.mark.parametrize("stride", [1, 2])
+@pytest.mark.parametrize("padding", ["SAME", "VALID"])
+def test_implicit_bit_identical_to_patch_gemm(ab, wb, stride, padding):
+    x, x_lv, w_lv, s_w, z_w = _conv_problem(ab, wb)
+    kw_args = dict(kh=3, kw=3, stride=stride, padding=padding,
+                   a_bits=ab, w_bits=wb)
+    ref = np.asarray(quant_conv2d_pre(x, w_lv, s_w, z_w, engine="int8",
+                                      **kw_args))
+    pallas = np.asarray(conv_implicit_pallas(x_lv, w_lv, s_w, z_w,
+                                             interpret=True, **kw_args))
+    xla = np.asarray(conv_implicit_xla(x_lv, w_lv, s_w, z_w, **kw_args))
+    assert (pallas == ref).all()
+    assert (xla == ref).all()
+
+
+@pytest.mark.parametrize("stride", [1, 2])
+@pytest.mark.parametrize("padding", ["SAME", "VALID"])
+def test_implicit_bit_identical_to_fused_qgemm(stride, padding):
+    """Against the PR-1 fused Pallas chain specifically (same epilogue)."""
+    ab, wb = 4, 1
+    x, x_lv, w_lv, s_w, z_w = _conv_problem(ab, wb, H=8, W=8, cin=4, cout=6)
+    kw_args = dict(kh=3, kw=3, stride=stride, padding=padding,
+                   a_bits=ab, w_bits=wb)
+    fused = np.asarray(quant_conv2d_pre(x, w_lv, s_w, z_w, engine="fused",
+                                        **kw_args))
+    pallas = np.asarray(conv_implicit_pallas(x_lv, w_lv, s_w, z_w,
+                                             interpret=True, **kw_args))
+    assert (pallas == fused).all()
+
+
+def test_implicit_rectangular_kernel_and_odd_dims():
+    """kh != kw on odd spatial dims — the halo arithmetic must still match."""
+    for stride in (1, 2):
+        for padding in ("SAME", "VALID"):
+            x, x_lv, w_lv, s_w, z_w = _conv_problem(
+                4, 1, H=7, W=11, kh=5, kw=3, cin=3, cout=4)
+            kw_args = dict(kh=5, kw=3, stride=stride, padding=padding,
+                           a_bits=4, w_bits=1)
+            ref = np.asarray(quant_conv2d_pre(x, w_lv, s_w, z_w,
+                                              engine="int8", **kw_args))
+            pallas = np.asarray(conv_implicit_pallas(
+                x_lv, w_lv, s_w, z_w, interpret=True, **kw_args))
+            xla = np.asarray(conv_implicit_xla(x_lv, w_lv, s_w, z_w,
+                                               **kw_args))
+            assert (pallas == ref).all(), (stride, padding)
+            assert (xla == ref).all(), (stride, padding)
+
+
+def test_quant_conv2d_pre_auto_engine_bit_identical():
+    """The dispatcher's pick (implicit on this shape, any backend) matches
+    an explicit GEMM engine bit-for-bit through the public conv entry."""
+    x, x_lv, w_lv, s_w, z_w = _conv_problem(4, 1, H=20, W=20, cin=64,
+                                            cout=32, B=2)
+    kw_args = dict(kh=3, kw=3, stride=1, padding="SAME", a_bits=4, w_bits=1)
+    auto = np.asarray(quant_conv2d_pre(x, w_lv, s_w, z_w, **kw_args))
+    ref = np.asarray(quant_conv2d_pre(x, w_lv, s_w, z_w, engine="f32dot",
+                                      **kw_args))
+    assert (auto == ref).all()
+
+
+def test_quant_conv_serve_explicit_implicit_engine():
+    x, x_lv, w_lv, s_w, z_w = _conv_problem(2, 1)
+    kw_args = dict(kh=3, kw=3, stride=1, padding="SAME", a_bits=2, w_bits=1)
+    out = np.asarray(quant_conv_serve(x_lv, w_lv, s_w, z_w,
+                                      engine="implicit", **kw_args))
+    ref = np.asarray(quant_conv_serve(x_lv, w_lv, s_w, z_w, engine="int8",
+                                      **kw_args))
+    assert (out == ref).all()
+
+
+def test_implicit_xla_huge_k_accumulator_exact():
+    """K in [65793, 74565) at a_bits=8: each nibble-pair conv fits the f32
+    mantissa but their SUM does not — the accumulation must run in int32
+    (regression: f32 accumulation silently rounded, max diff ~2e-3).
+
+    The reference is the jitted ``quant_conv2d_pre`` path: bit-identity is
+    a compiled-vs-compiled property (eager execution of the same epilogue
+    can differ by FMA-contraction ulps on CPU)."""
+    cin = 7400  # K = 3*3*7400 = 66600
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    x = jax.random.uniform(k1, (1, 5, 5, cin))
+    w = jax.random.normal(k2, (3, 3, cin, 2))
+    w_lv, s_w, z_w = prequantize_conv_weight(w, 1)
+    x_lv = activation_levels(x, 8)[0].astype(level_dtype(8))
+    kw_args = dict(kh=3, kw=3, stride=1, padding="SAME", a_bits=8, w_bits=1)
+    got = np.asarray(conv_implicit_xla(x_lv, w_lv, s_w, z_w, **kw_args))
+    ref = np.asarray(quant_conv2d_pre(x, w_lv, s_w, z_w, engine="int8",
+                                      **kw_args))
+    assert (got == ref).all()
+
+
+# ---------------------------------------------------------------------------
+# engine dispatch
+# ---------------------------------------------------------------------------
+
+def test_select_engine_implicit_dispatch():
+    deep = ConvShape(20, 20, 3, 3, 1, "SAME")      # kdim 3*3*64 = 576
+    assert select_engine(800, 576, 128, 4, 1, backend="tpu",
+                         conv=deep) == "implicit"
+    assert select_engine(800, 576, 128, 4, 1, backend="cpu",
+                         conv=deep) == "implicit"
+    # 1x1 conv: no patch blowup -> never implicit
+    one = ConvShape(20, 20, 1, 1, 1, "VALID")
+    assert select_engine(800, 64, 128, 4, 1, backend="tpu",
+                         conv=one) == "fused"
+    # shallow K stays fused on TPU
+    shallow = ConvShape(40, 40, 3, 3, 1, "SAME")   # kdim 3*3*3 = 27
+    assert select_engine(3200, 27, 64, 4, 1, backend="tpu",
+                         conv=shallow) == "fused"
+    # stride outside the kernel's support -> GEMM engines
+    s4 = ConvShape(112, 112, 11, 11, 4, "SAME")
+    assert select_engine(784, 363, 96, 4, 1, backend="tpu",
+                         conv=s4) == "fused"
+    # full-window FC-as-conv (alexnet FC6): oh=ow=1, zero im2col blowup,
+    # the dense fused GEMM is strictly better
+    fc = ConvShape(6, 6, 6, 6, 1, "VALID")
+    assert select_engine(1, 9216, 4096, 8, 1, backend="tpu",
+                         conv=fc) == "fused"
+    assert select_engine(1, 9216, 4096, 8, 1, backend="cpu",
+                         conv=fc) == "f32dot"
+    # tiny-spatial off-TPU: patch GEMM keeps winning (measured)
+    tiny = ConvShape(13, 13, 3, 3, 1, "SAME")
+    assert select_engine(169, 2304, 384, 8, 1, backend="cpu",
+                         conv=tiny) in ("f32dot", "int8")
+    # no conv geometry: dense dispatch unchanged
+    assert select_engine(800, 576, 128, 4, 1, backend="tpu") == "fused"
+    # off-TPU feasibility: K beyond the xla realization's exactness bound
+    # must fall back to the GEMM engines, not trace-crash in the kernel
+    huge = ConvShape(16, 16, 3, 3, 1, "SAME")  # K = 9*8300 = 74700
+    assert select_engine(512, 74700, 64, 4, 4, backend="cpu",
+                         conv=huge) == "int8"
+
+
+def test_implicit_xla_exactness_guard():
+    """5-7 bit operands stay whole under _nibble_split, so the feasibility
+    bound must use the actual group widths (regression: assuming 4-bit
+    groups silently rounded W6A6 at K=45000)."""
+    from repro.kernels.conv_implicit import implicit_xla_exact
+
+    assert implicit_xla_exact(2304, 8, 1)          # alexnet regime
+    assert implicit_xla_exact(66600, 8, 1)         # nibble-split, exact
+    assert not implicit_xla_exact(45000, 6, 6)     # whole 6-bit groups
+    assert not implicit_xla_exact(74700, 4, 4)     # past the nibble bound
+    cin = 5000  # K = 45000
+    x_lv = jnp.ones((1, 4, 4, cin), jnp.int8)
+    w_lv = jnp.ones((9 * cin, 2), jnp.int8)
+    with pytest.raises(ValueError, match="inexact"):
+        conv_implicit_xla(x_lv, w_lv, jnp.float32(1.0), jnp.float32(0.0),
+                          kh=3, kw=3, stride=1, padding="SAME",
+                          a_bits=6, w_bits=6)
+
+
+def test_cnn_serve_forward_engines_agree():
+    """Full serve forward: auto dispatch == forced GEMM engine, float
+    checkpoint == prequantized params (on-the-fly prequant path)."""
+    from repro.models.cnn import (ConvSpec, cnn_forward, init_cnn,
+                                  prepare_serve_params)
+
+    # tiny 3-layer net exercising implicit dispatch + the 1x1 fallback
+    spec = [ConvSpec(3, 16, 3, role="first"), ConvSpec(16, 64, 3),
+            ConvSpec(64, 10, 1, role="last")]
+    params, _ = init_cnn(jax.random.PRNGKey(0), spec)
+    sp = prepare_serve_params(params, spec, W1A4)
+    x = jax.random.uniform(jax.random.PRNGKey(1), (2, 16, 16, 3))
+    auto = np.asarray(cnn_forward(sp, x, spec, W1A4, "serve"))
+    forced = np.asarray(cnn_forward(
+        sp, x, spec, dataclasses.replace(W1A4, engine="int8"), "serve"))
+    from_float = np.asarray(cnn_forward(params, x, spec, W1A4, "serve"))
+    assert (auto == forced).all()
+    assert (auto == from_float).all()
+
+
+# ---------------------------------------------------------------------------
+# im2col_sliced edge cases (cross-checked vs conv_general_dilated_patches)
+# ---------------------------------------------------------------------------
+
+def _patches_oracle(x, kh, kw, stride, padding):
+    """(kh, kw, C)-major view of ``im2col`` (which wraps
+    ``jax.lax.conv_general_dilated_patches``, (C, kh, kw)-major)."""
+    p = im2col(x, kh, kw, stride, padding)
+    b, oh, ow, _ = p.shape
+    c = x.shape[-1]
+    return (p.reshape(b, oh, ow, c, kh * kw)
+            .transpose(0, 1, 2, 4, 3).reshape(b, oh, ow, kh * kw * c))
+
+
+@pytest.mark.parametrize("hw,kh,kw,stride,padding", [
+    ((7, 7), 3, 3, 2, "SAME"),     # stride 2, SAME, odd dims
+    ((9, 7), 3, 3, 2, "SAME"),     # odd + rectangular image
+    ((8, 8), 3, 3, 1, "VALID"),
+    ((9, 9), 3, 3, 2, "VALID"),
+    ((8, 10), 2, 5, 1, "SAME"),    # kh != kw
+    ((10, 8), 5, 2, 2, "VALID"),   # kh != kw, strided, VALID
+    ((5, 5), 5, 5, 1, "VALID"),    # window == image
+])
+def test_im2col_sliced_matches_dilated_patches(hw, kh, kw, stride, padding):
+    h, w = hw
+    x = jax.random.uniform(jax.random.PRNGKey(h * w + kh), (2, h, w, 3))
+    got = np.asarray(im2col_sliced(x, kh, kw, stride, padding))
+    want = np.asarray(_patches_oracle(x, kh, kw, stride, padding))
+    assert got.shape == want.shape
+    np.testing.assert_array_equal(got, want)
+
+
+def test_im2col_sliced_preserves_integer_dtype():
+    """The serve path's whole point: integer patches stay integer."""
+    x = jnp.arange(2 * 6 * 6 * 4, dtype=jnp.int8).reshape(2, 6, 6, 4) % 16
+    p = im2col_sliced(x, 3, 3, 2, "SAME")
+    assert p.dtype == jnp.int8
+    assert p.shape == (2, 3, 3, 36)
