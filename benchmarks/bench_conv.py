@@ -82,7 +82,7 @@ def _layer_rows(name, spec, img: int, batch: int, quant, n: int):
         xi = jax.random.uniform(jax.random.PRNGKey(i), (batch, h, h, s.cin))
         p, sp = params[i], serve_params[i]
         oh = _conv_oh(s, h)
-        shape = ConvShape(h, h, s.k, s.k, s.stride, pad)
+        shape = ConvShape(h, h, s.k, s.k, s.stride, pad, batch=batch)
         kdim = s.k * s.k * s.cin
         gemm_engine = select_engine(batch * oh * oh, kdim, s.cout,
                                     quant.a_bits, quant.w_bits)  # no conv geo
@@ -120,6 +120,48 @@ def _layer_rows(name, spec, img: int, batch: int, quant, n: int):
     return rows
 
 
+def crossover_rows(fast: bool = False):
+    """B>1 crossover validation for the batch-aware dispatcher (PR 3).
+
+    The serving engine dispatches co-batched buckets, so ``select_engine``
+    sees ``ConvShape.batch > 1``; these rows measure implicit vs patch-GEMM
+    at batch 1/2/8 on layers straddling the single-image threshold and
+    record whether the batch-scaled bound picked the faster engine.
+    """
+    import jax
+
+    from repro.core.conv_lowering import quant_conv2d_pre
+    from repro.core.prequant import prequantize_conv_weight
+    from repro.kernels.ops import ConvShape, select_engine
+
+    n = 2 if fast else 5
+    layers = [(10, 32, 64, 3), (5, 64, 64, 3)]
+    if not fast:
+        layers += [(20, 32, 32, 3)]
+    rows = []
+    for (h, cin, cout, k) in layers:
+        w = jax.random.normal(jax.random.PRNGKey(0), (k, k, cin, cout))
+        w_lv, s_w, z_w = prequantize_conv_weight(w, 1)
+        for batch in (1, 2, 8):
+            x = jax.random.uniform(jax.random.PRNGKey(1), (batch, h, h, cin))
+            common = dict(kh=k, kw=k, stride=1, padding="SAME",
+                          a_bits=4, w_bits=1)
+            gemm_us = _timeit(lambda: quant_conv2d_pre(
+                x, w_lv, s_w, z_w, engine="f32dot", **common), n=n)
+            impl_us = _timeit(lambda: quant_conv2d_pre(
+                x, w_lv, s_w, z_w, engine="implicit", **common), n=n)
+            shape = ConvShape(h, h, k, k, 1, "SAME", batch=batch)
+            pick = select_engine(shape.m, k * k * cin, cout, 4, 1, conv=shape)
+            rows.append(dict(
+                name=f"crossover_{h}x{h}x{cin}_B{batch}", kind="crossover",
+                batch=batch, m_amp=round(shape.m * shape.read_amplification),
+                gemm_us=round(gemm_us), implicit_us=round(impl_us),
+                picked=pick,
+                picked_faster=bool((impl_us < gemm_us)
+                                   == (pick == "implicit"))))
+    return rows
+
+
 def conv_rows(fast: bool = False):
     from repro.core.quant import W1A4, W1A8
     from repro.models.cnn import alexnet_spec, svhn_cnn_spec
@@ -129,6 +171,7 @@ def conv_rows(fast: bool = False):
                        2, W1A4, n)
     if not fast:
         rows += _layer_rows("alexnet", alexnet_spec(), 112, 1, W1A8, n)
+    rows += crossover_rows(fast=fast)
     os.makedirs("results", exist_ok=True)
     with open("results/bench_conv.json", "w") as f:
         json.dump(rows, f, indent=1, default=str)

@@ -30,26 +30,20 @@ def main():
         lm_batch(0, 0, batch=B, seq=S_p, vocab=cfg.vocab)["tokens"])
 
     # ---- prefill ----
-    logits, cache = T.prefill(params, cfg, SINGLE, tokens=prompts)
-    slots = S_p + S_d
-    # widen the prefill cache to the decode horizon
-    cache = jax.tree.map(
-        lambda t: jnp.pad(t, [(0, 0), (0, 0), (0, slots - t.shape[2])]
-                          + [(0, 0)] * (t.ndim - 3))
-        if t.ndim >= 3 and t.shape[2] == S_p else t, cache)
-    for kind in cache:
-        if "pos" in cache[kind]:
-            cache[kind]["pos"] = jnp.where(
-                jnp.arange(slots)[None, None, :] < S_p,
-                cache[kind]["pos"], -1)
+    from repro.launch.serve import greedy_token, widen_cache
 
-    tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+    logits, cache = T.prefill(params, cfg, SINGLE, tokens=prompts)
+    # widen the prefill cache to the decode horizon (structural: only the
+    # attention k/v/pos entries grow — see launch/serve.widen_cache)
+    cache = widen_cache(cache, S_p, S_p + S_d)
+
+    tok = greedy_token(logits, cfg.vocab)
     step = jax.jit(lambda c, t, p: T.decode_step(params, c, t, p, cfg, SINGLE))
 
     out = [tok]
     for t in range(S_d - 1):
         lg, cache = step(cache, tok, S_p + t)
-        tok = jnp.argmax(lg[:, -1:], -1).astype(jnp.int32)
+        tok = greedy_token(lg, cfg.vocab)
         out.append(tok)
     gen = jnp.concatenate(out, axis=1)
     for b in range(B):

@@ -119,6 +119,31 @@ def replicated(mesh: Mesh):
     return NamedSharding(mesh, P())
 
 
+def batch_sharding(mesh: Mesh, axis: str = "data") -> NamedSharding:
+    """Sharding for host->device staging of a dim-0-batched array."""
+    return NamedSharding(mesh, P(axis))
+
+
+def data_parallel(fn, mesh: Mesh, axis: str = "data"):
+    """shard_map-wrap ``fn(params, batch) -> out`` over the mesh's data axis.
+
+    The serve-engine layout (DESIGN.md §7): params replicated (P() prefix
+    spec), dim 0 of every batch input and output sharded across ``axis`` —
+    each device runs the per-shard forward on its slice of the co-batched
+    requests, the direct analogue of the paper's §II-A independent kernel
+    windows on parallel SOT-MRAM sub-arrays.  ``fn`` must be per-sample
+    independent (no cross-batch reductions); the serve forwards guarantee
+    that (per-sample norm statistics, per-request KV caches).
+
+    The dispatched batch must be divisible by the axis size — the engine's
+    padding buckets guarantee it (`_pad_to` rounds up to the device count).
+    """
+    from jax.experimental.shard_map import shard_map
+
+    return shard_map(fn, mesh=mesh, in_specs=(P(), P(axis)),
+                     out_specs=P(axis), check_rep=False)
+
+
 def batch_pspec(plan, ndim: int, batch_dim: int = 0) -> P:
     spec = [None] * ndim
     spec[batch_dim] = tuple(plan.batch_axes) if plan.batch_axes else None

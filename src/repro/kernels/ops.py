@@ -35,13 +35,19 @@ def _interpret() -> bool:
 
 @dataclasses.dataclass(frozen=True)
 class ConvShape:
-    """Static conv geometry for conv-aware engine selection."""
+    """Static conv geometry (including batch) for engine selection.
+
+    ``batch`` entered in PR 3: the serving engine coalesces many requests
+    into one dispatch, so feasibility and crossover bounds must see the
+    whole co-batched problem, not a single image.
+    """
     h: int
     w: int
     kh: int
     kw: int
     stride: int
     padding: str
+    batch: int = 1
 
     @property
     def out_hw(self) -> tuple[int, int]:
@@ -50,10 +56,27 @@ class ConvShape:
                        self.padding)
 
     @property
+    def m(self) -> int:
+        """GEMM rows of the whole batched problem: batch * oh * ow."""
+        oh, ow = self.out_hw
+        return self.batch * oh * ow
+
+    @property
     def read_amplification(self) -> float:
-        """im2col HBM blowup: patch elements per input element (~kh*kw)."""
+        """im2col HBM blowup: patch elements per input element (~kh*kw).
+
+        A per-image ratio — batch scales patch and input bytes alike."""
         oh, ow = self.out_hw
         return self.kh * self.kw * oh * ow / max(self.h * self.w, 1)
+
+    def padded_image_elems(self, cin: int) -> int:
+        """Elements of ONE image plane as the implicit kernel stages it in
+        VMEM (SAME-padded); the kernel is resident once per batch index, so
+        this bound is per-image regardless of batch."""
+        from repro.core.conv_lowering import pad_split
+        (pt, pb), (pl, pr) = pad_split(self.h, self.w, self.kh, self.kw,
+                                       self.stride, self.padding)
+        return (self.h + pt + pb) * (self.w + pl + pr) * cin
 
 
 # implicit engine eligibility: the kernel supports these strides, and only
@@ -61,6 +84,22 @@ class ConvShape:
 # conv has no patch blowup — im2col is the identity there)
 IMPLICIT_STRIDES = (1, 2)
 IMPLICIT_KDIM_MIN = 512
+# the Pallas kernel keeps one image's int8 levels resident in VMEM per
+# batch index; leave half of the ~16 MiB VMEM for weight/output tiles and
+# the pipeline's double buffers
+IMPLICIT_VMEM_BYTES = 8 << 20
+# CPU crossover (measured, benchmarks/bench_conv.py, batch 1-8): the
+# implicit direct conv pays off once the whole BATCHED problem moves
+# enough amplified patch elements per Cin*Cout pair — conv.m (= B*oh*ow)
+# times the per-image amplification.  The per-dispatch conv-loop overhead
+# amortizes over the batch (measured: deep-cin layers flip to implicit by
+# B=2-4 well below the single-image threshold), so the threshold divides
+# by the batch (floored at B=8 — beyond that the loop cost is fully
+# amortized and only the per-element term is left).  Shallow-K convs
+# (e.g. cin=3 stem layers) lose at every batch size: each (dy, dx) tap
+# does too little dot work to cover its slice/reshape, hence the K floor.
+IMPLICIT_CPU_M_AMP_MIN = 2500
+IMPLICIT_CPU_KDIM_MIN = 128
 
 
 def select_engine(m: int, k: int, n: int, a_bits: int, w_bits: int,
@@ -83,9 +122,16 @@ def select_engine(m: int, k: int, n: int, a_bits: int, w_bits: int,
                     while the accumulator fits the fp32 mantissa.
 
     All five are exact; this is purely a performance decision, so the
-    heuristic is deliberately coarse.
+    heuristic is deliberately coarse.  When ``conv`` is given its ``batch``
+    field makes the bounds batch-aware (the serving engine dispatches
+    co-batched buckets): ``m`` must describe the whole batched problem
+    (``conv.m``), the CPU crossover scales with it, and the TPU kernel's
+    VMEM-residency feasibility stays per-image (the grid revisits VMEM once
+    per batch index).
     """
     backend = backend or jax.default_backend()
+    if conv is not None:
+        m = conv.m  # engine bounds always see the full batched rows
     impl_ok = (conv is not None and conv.kh * conv.kw > 1
                and conv.stride in IMPLICIT_STRIDES
                and conv.padding in ("SAME", "VALID")
@@ -93,7 +139,16 @@ def select_engine(m: int, k: int, n: int, a_bits: int, w_bits: int,
                # (oh=ow=1, amplification 1) stay on the dense fused GEMM
                and conv.read_amplification >= 4.0)
     if backend == "tpu":
-        if impl_ok and k >= IMPLICIT_KDIM_MIN:
+        # feasibility: one image's activation LEVELS must stay VMEM-resident
+        # — int8 up to 7 activation bits, int32 at 8 (level_dtype), so the
+        # budget is in bytes, not elements
+        from repro.core.prequant import level_dtype
+
+        cin = k // max(conv.kh * conv.kw, 1) if conv is not None else 0
+        lvl_bytes = jnp.zeros((), level_dtype(a_bits)).dtype.itemsize
+        if (impl_ok and k >= IMPLICIT_KDIM_MIN
+                and conv.padded_image_elems(cin) * lvl_bytes
+                <= IMPLICIT_VMEM_BYTES):
             return "implicit"
         # binary, huge-K, output tile small enough that the 128x128 MXU
         # would idle: the 32x K-compressed VPU popcount path wins
@@ -102,13 +157,15 @@ def select_engine(m: int, k: int, n: int, a_bits: int, w_bits: int,
         return "fused"
     # CPU/GPU: XLA lowers integer matmuls to scalar loops; the float unit is
     # both faster and exact under the fp32-mantissa bound.  The implicit
-    # direct conv wins (measured, benchmarks/bench_conv.py) once there is
-    # enough amplified traffic to pay back the conv-loop overhead:
-    # m * amplification ~ the patch elements saved per Cin*Cout pair.
-    # Tiny-spatial layers (alexnet's 7x7 tail) stay on the patch GEMM, and
-    # K beyond the off-TPU realization's exactness bound falls back to the
-    # int8 engine (conv_implicit_xla would raise there).
-    if (impl_ok and m * conv.read_amplification >= 2500
+    # direct conv wins (measured, benchmarks/bench_conv.py, batch 1-8) once
+    # the batched problem moves enough amplified traffic to pay back the
+    # conv-loop overhead: conv.m * amplification ~ the patch elements saved
+    # per Cin*Cout pair.  Tiny-spatial layers (alexnet's 7x7 tail) stay on
+    # the patch GEMM, and K beyond the off-TPU realization's exactness
+    # bound falls back to the int8 engine (conv_implicit_xla would raise).
+    if (impl_ok and k >= IMPLICIT_CPU_KDIM_MIN
+            and m * conv.read_amplification
+            >= IMPLICIT_CPU_M_AMP_MIN / min(conv.batch, 8)
             and implicit_xla_exact(k, a_bits, w_bits)):
         return "implicit"
     return "f32dot" if f32dot_exact(k, a_bits, w_bits) else "int8"
@@ -167,7 +224,7 @@ def quant_conv_serve(x_lv: jax.Array, w_lv: jax.Array, s_w, z_w, *,
     if engine is None:
         engine = select_engine(
             b * oh * ow, kh * kw * cin, cout, a_bits, w_bits,
-            conv=ConvShape(h, w, kh, kw, stride, padding))
+            conv=ConvShape(h, w, kh, kw, stride, padding, batch=b))
     if engine == "implicit":
         if jax.default_backend() == "tpu":
             return conv_implicit_pallas(

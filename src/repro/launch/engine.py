@@ -1,0 +1,457 @@
+"""Request-level serving engine: queue -> padding buckets -> device dispatch.
+
+PRs 1-2 made a *single* request fast (fused qGEMM, implicit-GEMM conv,
+scanned decode); this engine turns that fast single-shot path into a loaded
+multi-request, multi-device system (DESIGN.md §7):
+
+  * **Request queue + padding-bucket batcher** — independent requests are
+    grouped by shape key (prompt length for LMs, image shape for CNNs) and
+    coalesced into one device dispatch.  A bucket flushes when it reaches
+    ``max_batch`` or when its oldest request has waited ``flush_deadline_s``
+    (latency bound under light load).  Ragged flushes pad the batch up to
+    the next power of two (and to a device-count multiple), so the jit
+    cache holds at most log2(max_batch)+1 programs per shape key.
+  * **Double-buffered host->device staging** — while bucket *i* computes,
+    bucket *i+1*'s arrays transfer and bucket *i-1*'s results harvest; at
+    most two buckets are in flight on device (bounded memory; the rest of
+    the backpressure story is ``max_pending`` on the queue, see
+    :meth:`ServeEngine.submit`).
+  * **Data-parallel execution** — with more than one device, the batched
+    forward runs under ``shard_map`` over the mesh's ``data`` axis
+    (:func:`repro.distributed.sharding.data_parallel`): params replicated,
+    request axis sharded.  This is the datacenter analogue of the paper's
+    §II-A sub-array parallelism — independent kernel windows mapped onto
+    parallel SOT-MRAM sub-arrays become independent requests mapped onto
+    parallel devices.  With one device the engine falls back to plain
+    ``jit`` (no collective machinery).
+
+Correctness contract: batching is invisible.  The serve forwards are
+per-sample independent (per-sample norm statistics, per-request KV cache
+rows), so a request's result is bit-identical whether it ran alone, in a
+full bucket, in a ragged padded bucket, or sharded across devices —
+``tests/test_engine.py`` pins this across engines and bucket shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class QueueFull(RuntimeError):
+    """Backpressure signal: the queue holds ``max_pending`` requests.
+
+    Callers shed load or retry after draining — the engine never grows its
+    buffers unboundedly under overload.
+    """
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    rid: int
+    payload: Any
+    t_submit: float
+
+
+@dataclasses.dataclass(frozen=True)
+class Result:
+    rid: int
+    value: np.ndarray
+    t_submit: float
+    t_done: float
+    batch: int    # real co-batched requests in the dispatch
+    padded: int   # dispatched batch after padding
+
+    @property
+    def latency_s(self) -> float:
+        return self.t_done - self.t_submit
+
+
+@dataclasses.dataclass
+class Bucket:
+    key: Any
+    requests: list
+
+
+class BucketBatcher:
+    """Pure-python bucketing queue (no jax): group by shape key, flush on
+    ``max_batch`` or deadline.  Separately unit-testable."""
+
+    def __init__(self, max_batch: int = 8, flush_deadline_s: float = 0.005):
+        assert max_batch >= 1
+        self.max_batch = max_batch
+        self.flush_deadline_s = flush_deadline_s
+        self._open: dict[Any, list] = {}
+        self._opened_at: dict[Any, float] = {}
+
+    def pending(self) -> int:
+        return sum(len(v) for v in self._open.values())
+
+    def add(self, req: Request, key: Any, now: float) -> Optional[Bucket]:
+        """Queue one request; returns the bucket if this filled it."""
+        q = self._open.setdefault(key, [])
+        if not q:
+            self._opened_at[key] = now
+        q.append(req)
+        if len(q) >= self.max_batch:
+            return self._close(key)
+        return None
+
+    def take_expired(self, now: float) -> list[Bucket]:
+        """Buckets whose oldest request has waited past the deadline."""
+        keys = [k for k, t in self._opened_at.items()
+                if now - t >= self.flush_deadline_s and self._open.get(k)]
+        return [self._close(k) for k in keys]
+
+    def take_all(self) -> list[Bucket]:
+        return [self._close(k) for k in list(self._open) if self._open[k]]
+
+    def _close(self, key: Any) -> Bucket:
+        reqs = self._open.pop(key)
+        self._opened_at.pop(key, None)
+        return Bucket(key, reqs)
+
+
+# ---------------------------------------------------------------------------
+# Model runners: how one bucket becomes one batched device program
+# ---------------------------------------------------------------------------
+
+def _collate(payloads, pad_to: int, dtype) -> np.ndarray:
+    """Stack payloads into a (pad_to, ...) batch.  Padded rows are copies
+    of row 0: real data keeps every lane's numerics in-range, and the
+    engine slices padding off before results surface."""
+    x = np.stack([np.asarray(p, dtype) for p in payloads])
+    if pad_to > len(payloads):
+        x = np.concatenate(
+            [x, np.broadcast_to(x[:1], (pad_to - len(payloads),) + x.shape[1:])])
+    return x
+
+
+def _split_rows(host_out: np.ndarray, n: int) -> list[np.ndarray]:
+    return [host_out[i] for i in range(n)]
+
+
+class CNNRunner:
+    """Batched CNN serve forward (image (H, W, C) -> logits row).
+
+    ``params`` should come from :func:`repro.models.cnn.prepare_serve_params`
+    (weights quantized once at load); float checkpoints also work (the
+    forward prequantizes on the fly).  ``quant.engine`` selects the conv
+    engine explicitly, or "auto" for backend/shape dispatch.
+    """
+
+    def __init__(self, params, spec, quant):
+        self.params = params
+        self.spec = spec
+        self.quant = quant
+
+    def shape_key(self, payload) -> tuple:
+        return ("cnn",) + tuple(payload.shape)
+
+    def collate(self, payloads, pad_to: int) -> np.ndarray:
+        return _collate(payloads, pad_to, np.float32)
+
+    def make_forward(self, key) -> Callable:
+        from repro.models.cnn import cnn_forward
+
+        spec, quant = self.spec, self.quant
+
+        def fwd(params, x):
+            return cnn_forward(params, x, spec, quant, "serve")
+
+        return fwd
+
+    split = staticmethod(_split_rows)
+
+
+class LMRunner:
+    """Batched LM generate (tokens (S_p,) -> generated tokens (S_d,)).
+
+    One device program per (prompt-len, horizon) bucket shape: jitted
+    prefill + cache widening + the one-trace ``lax.scan`` greedy decode of
+    ``launch/serve.py``, fused into a single dispatch per bucket.
+    """
+
+    def __init__(self, params, cfg, *, new_tokens: int, qmode: str = "serve",
+                 plan=None):
+        from repro.configs import SINGLE
+
+        self.params = params
+        self.cfg = cfg
+        self.new_tokens = new_tokens
+        self.qmode = qmode
+        self.plan = plan or SINGLE
+
+    def shape_key(self, payload) -> tuple:
+        return ("lm", int(np.asarray(payload).shape[-1]), self.new_tokens)
+
+    def collate(self, payloads, pad_to: int) -> np.ndarray:
+        return _collate(payloads, pad_to, np.int32)
+
+    def make_forward(self, key) -> Callable:
+        from repro.launch.serve import (greedy_token, make_decode_step,
+                                        widen_cache)
+        from repro.models import transformer as T
+
+        _, prompt_len, new_tokens = key
+        cfg, plan, qmode = self.cfg, self.plan, self.qmode
+        slots = prompt_len + new_tokens
+
+        def fwd(params, toks):
+            logits, cache = T.prefill(params, cfg, plan, tokens=toks,
+                                      qmode=qmode)
+            cache = widen_cache(cache, prompt_len, slots)
+            first = greedy_token(logits, cfg.vocab)
+            step = make_decode_step(params, cfg, plan, qmode)
+            (_, _, _), toks_out = jax.lax.scan(
+                step, (cache, first, jnp.asarray(prompt_len, jnp.int32)),
+                None, length=new_tokens - 1)
+            return jnp.concatenate([first, toks_out[:, :, 0].T], axis=1)
+
+        return fwd
+
+    split = staticmethod(_split_rows)
+
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
+
+def _pow2_ceil(n: int) -> int:
+    return 1 << max(n - 1, 0).bit_length()
+
+
+class ServeEngine:
+    """Coalesce independent requests into batched, sharded device dispatches.
+
+    Parameters
+    ----------
+    runner:           a :class:`CNNRunner`/:class:`LMRunner`-shaped adapter.
+    max_batch:        bucket capacity = the largest dispatched batch.
+    flush_deadline_s: max queueing delay before a partial bucket flushes.
+    mesh:             1-D ``("data",)`` mesh (``launch/mesh.make_serve_mesh``)
+                      or None for the single-device ``jit`` fallback.
+    max_pending:      queue bound; :meth:`submit` raises :class:`QueueFull`
+                      beyond it (backpressure, DESIGN.md §7).
+    """
+
+    def __init__(self, runner, *, max_batch: int = 8,
+                 flush_deadline_s: float = 0.005, mesh=None,
+                 max_pending: int = 4096,
+                 clock: Callable[[], float] = time.perf_counter):
+        self.runner = runner
+        self.mesh = mesh
+        self.clock = clock
+        self.max_pending = max_pending
+        self.batcher = BucketBatcher(max_batch, flush_deadline_s)
+        self._ready: deque[Bucket] = deque()
+        self._results: dict[int, Result] = {}
+        self._fns: dict = {}
+        self._next_rid = 0
+        self._n_data = 1 if mesh is None else int(np.prod(mesh.devices.shape))
+        if mesh is not None:
+            from repro.distributed.sharding import replicated
+            self._params = jax.device_put(runner.params, replicated(mesh))
+        else:
+            self._params = jax.device_put(runner.params)
+        self.stats = dict(dispatches=0, requests=0, padded_rows=0)
+
+    # -- queue side ---------------------------------------------------------
+
+    def _queued(self) -> int:
+        """Requests waiting anywhere ahead of dispatch (open partial
+        buckets + closed-but-undispatched buckets), in REQUESTS — the unit
+        ``max_pending`` bounds."""
+        return (self.batcher.pending()
+                + sum(len(b.requests) for b in self._ready))
+
+    def submit(self, payload, t_submit: float | None = None) -> int:
+        """Enqueue one request; returns its rid.  Raises QueueFull when
+        ``max_pending`` requests are already waiting (shed or retry).
+
+        ``t_submit`` backdates the request's latency clock to its true
+        arrival time (offered-load drivers running behind schedule must
+        charge the client-side backlog wait to the request — coordinated
+        omission otherwise hides exactly the latency overload creates).
+        Flush-deadline bookkeeping always uses the actual clock.
+        """
+        if self._queued() >= self.max_pending:
+            raise QueueFull(f"{self.max_pending} requests pending")
+        rid = self._next_rid
+        self._next_rid += 1
+        now = self.clock()
+        bucket = self.batcher.add(
+            Request(rid, payload, now if t_submit is None else t_submit),
+            self.runner.shape_key(payload), now)
+        if bucket is not None:
+            self._ready.append(bucket)
+        return rid
+
+    def pump(self) -> None:
+        """Dispatch full buckets plus any whose flush deadline expired."""
+        self._ready.extend(self.batcher.take_expired(self.clock()))
+        if self._ready:
+            self._execute(list(self._ready))
+            self._ready.clear()
+
+    def _flush_all(self) -> None:
+        """Dispatch EVERYTHING queued, partial buckets included — the only
+        operation guaranteed to relieve backpressure (pump() can't help
+        when the pressure is all in young partial buckets)."""
+        self._ready.extend(self.batcher.take_all())
+        if self._ready:
+            self._execute(list(self._ready))
+            self._ready.clear()
+
+    def drain(self) -> list[Result]:
+        """Flush everything (including partial buckets), run to idle, and
+        return all accumulated results ordered by rid."""
+        self._flush_all()
+        out = [self._results[rid] for rid in sorted(self._results)]
+        self._results.clear()
+        return out
+
+    def serve(self, payloads) -> list[Result]:
+        """Closed-loop convenience: submit all, drain, results in order.
+
+        Buckets accumulate and dispatch together in ``drain()`` so the
+        double-buffered pipeline overlaps them (per-submit pumping would
+        serialize stage->compute->harvest per bucket).  A full queue is
+        flushed in place (partial buckets dispatch early) rather than
+        surfacing QueueFull — closed loop means the caller IS the
+        backpressure."""
+        for p in payloads:
+            try:
+                self.submit(p)
+            except QueueFull:
+                self._flush_all()
+                self.submit(p)
+        return self.drain()
+
+    # -- device side --------------------------------------------------------
+
+    def _pad_to(self, n: int) -> int:
+        # cap at max_batch itself (a full bucket never pads above its own
+        # capacity); a non-pow2 cap still bounds the jit cache at
+        # log2(max_batch)+1 programs per shape key.  The device-multiple
+        # round-up may exceed max_batch when devices > max_batch — sharding
+        # needs every device populated.
+        padded = min(_pow2_ceil(n), self.batcher.max_batch)
+        if self._n_data > 1:
+            padded = -(-padded // self._n_data) * self._n_data
+        return padded
+
+    def _executable(self, key, padded: int):
+        cache_key = (key, padded)
+        if cache_key not in self._fns:
+            fwd = self.runner.make_forward(key)
+            # _pad_to guarantees device-divisible batches in mesh mode
+            if self.mesh is not None:
+                from repro.distributed.sharding import data_parallel
+                fn = jax.jit(data_parallel(fwd, self.mesh))
+            else:
+                fn = jax.jit(fwd)
+            self._fns[cache_key] = fn
+        return self._fns[cache_key]
+
+    def _stage(self, bucket: Bucket):
+        """Start the host->device transfer for one bucket (async)."""
+        padded = self._pad_to(len(bucket.requests))
+        batch = self.runner.collate([r.payload for r in bucket.requests],
+                                    padded)
+        if self.mesh is not None:
+            from repro.distributed.sharding import batch_sharding
+            dev = jax.device_put(batch, batch_sharding(self.mesh))
+        else:
+            dev = jax.device_put(batch)
+        return bucket, padded, dev
+
+    def _execute(self, buckets: list[Bucket]) -> None:
+        """Pipelined bucket loop: dispatch bucket i, then stage bucket i+1
+        (H2D overlaps i's compute), then harvest bucket i-1 (its compute
+        overlapped with i's dispatch).  At most two buckets in flight."""
+        staged = self._stage(buckets[0]) if buckets else None
+        inflight = None
+        for i in range(len(buckets)):
+            bucket, padded, dev = staged
+            out = self._executable(bucket.key, padded)(self._params, dev)
+            staged = self._stage(buckets[i + 1]) if i + 1 < len(buckets) else None
+            if inflight is not None:
+                self._harvest(*inflight)
+            inflight = (bucket, padded, out)
+        if inflight is not None:
+            self._harvest(*inflight)
+
+    def _harvest(self, bucket: Bucket, padded: int, out) -> None:
+        host = np.asarray(out)  # blocks until this bucket's compute is done
+        n = len(bucket.requests)
+        t_done = self.clock()
+        for req, val in zip(bucket.requests, self.runner.split(host, n)):
+            self._results[req.rid] = Result(req.rid, val, req.t_submit,
+                                            t_done, n, padded)
+        self.stats["dispatches"] += 1
+        self.stats["requests"] += n
+        self.stats["padded_rows"] += padded - n
+
+
+# ---------------------------------------------------------------------------
+# Offered-load harness (shared by launch/serve.py --throughput and
+# benchmarks/bench_serve.py)
+# ---------------------------------------------------------------------------
+
+def _percentile(xs, q: float) -> float:
+    return float(np.percentile(np.asarray(xs), q)) if len(xs) else float("nan")
+
+def warm_engine(engine: ServeEngine, payloads) -> ServeEngine:
+    """Compile every padded bucket size the engine can dispatch (1, 2, 4,
+    ..., max_batch) so measurements see a long-lived server's steady state
+    — ragged final buckets hit the jit cache, not a cold compile."""
+    size = 1
+    while True:
+        engine.serve(payloads[: min(size, len(payloads))])
+        if size >= engine.batcher.max_batch:
+            return engine
+        size = min(size * 2, engine.batcher.max_batch)
+
+
+def run_offered_load(engine: ServeEngine, payloads, rate_rps: float | None,
+                     clock: Callable[[], float] = time.perf_counter) -> dict:
+    """Drive the engine at a fixed offered rate (None = closed loop: all
+    requests available immediately).  Returns throughput + latency stats;
+    per-request latency is measured submit -> harvest (queueing included).
+    Engine stats are reset at entry so one warmed engine can serve several
+    measurement runs.
+    """
+    engine.stats.update(dispatches=0, requests=0, padded_rows=0)
+    t0 = clock()
+    for i, p in enumerate(payloads):
+        t_arrive = None
+        if rate_rps is not None:
+            t_arrive = t0 + i / rate_rps
+            while clock() < t_arrive:
+                engine.pump()  # flush deadline-expired buckets while idle
+                time.sleep(2e-4)
+        # when the driver runs behind schedule (over-subscription), the
+        # request still ARRIVED at t_arrive: charge the backlog wait to it
+        engine.submit(p, t_submit=t_arrive)
+        engine.pump()
+    results = engine.drain()
+    wall = clock() - t0
+    lats = [r.latency_s for r in results]
+    return dict(
+        n_requests=len(results),
+        offered_rps=(round(rate_rps, 1) if rate_rps is not None else "inf"),
+        achieved_rps=round(len(results) / wall, 2),
+        p50_ms=round(_percentile(lats, 50) * 1e3, 2),
+        p99_ms=round(_percentile(lats, 99) * 1e3, 2),
+        dispatches=engine.stats["dispatches"],
+        mean_batch=round(engine.stats["requests"]
+                         / max(engine.stats["dispatches"], 1), 2),
+        padded_rows=engine.stats["padded_rows"],
+        wall_s=round(wall, 4),
+    )

@@ -23,3 +23,18 @@ def make_host_mesh(model: int = 1):
     n = len(jax.devices())
     data = n // model
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_serve_mesh(data: int | None = None):
+    """Data-only mesh for the request-level serving engine.
+
+    The engine shards only the request/batch axis (params are replicated:
+    serve has no optimizer state, and the smoke-scale models fit per
+    device), so the mesh is 1-D over however many devices exist — or
+    ``None`` for the single-device fallback, where plain ``jit`` avoids
+    any collective/partitioning machinery.
+    """
+    n = data or len(jax.devices())
+    if n <= 1:
+        return None
+    return jax.make_mesh((n,), ("data",))

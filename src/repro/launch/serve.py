@@ -26,24 +26,69 @@ from repro.data.synthetic import lm_batch
 from repro.models import transformer as T
 
 
+# The only cache tensors with a sequence axis are the attention KV entries
+# (k, v, pos), and their layout is fixed by transformer.init_cache:
+# (layers, batch, slots, ...).  Identified by KEY, never by size: recurrent
+# state (rec.h is (layers, batch, lru_width), rwkv.s is (layers, batch,
+# heads, hd, hd), ...) has no sequence axis, and a width/head count that
+# merely *equals* the prompt length must not be padded.
+CACHE_SEQ_AXIS = {"k": 2, "v": 2, "pos": 2}
+
+
 def widen_cache(cache, prompt_len: int, slots: int):
-    """Grow a prefill cache to the decode horizon (position-preserving)."""
-    cache = jax.tree.map(
-        lambda t: jnp.pad(t, [(0, 0), (0, 0), (0, slots - t.shape[2])]
-                          + [(0, 0)] * (t.ndim - 3))
-        if t.ndim >= 3 and t.shape[2] == prompt_len else t, cache)
-    for kind in cache:
-        if "pos" in cache[kind]:
-            cache[kind]["pos"] = jnp.where(
-                jnp.arange(slots)[None, None, :] < prompt_len,
-                cache[kind]["pos"], -1)
-    return cache
+    """Grow a prefill cache to the decode horizon (position-preserving).
+
+    Only attention-style entries (dicts carrying k/v/pos) are widened, along
+    their structural sequence axis; every other state tensor passes through
+    untouched regardless of any size coincidence with ``prompt_len``.
+    New k/v slots are zero-filled and their ``pos`` is -1 (empty).
+    """
+    out = {}
+    for kind, entry in cache.items():
+        if not (isinstance(entry, dict) and "pos" in entry):
+            out[kind] = entry  # recurrent state: no sequence axis
+            continue
+        widened = dict(entry)
+        for key, axis in CACHE_SEQ_AXIS.items():
+            if key not in entry:
+                continue
+            t = entry[key]
+            grow = slots - t.shape[axis]
+            if grow <= 0:
+                continue
+            pad = [(0, 0)] * t.ndim
+            pad[axis] = (0, grow)
+            widened[key] = jnp.pad(t, pad,
+                                   constant_values=-1 if key == "pos" else 0)
+        out[kind] = widened
+    return out
 
 
 def make_prefill(params, cfg, plan, qmode: str):
     """Jitted prefill: tokens (B, S_p) -> (logits, cache)."""
     return jax.jit(
         lambda toks: T.prefill(params, cfg, plan, tokens=toks, qmode=qmode))
+
+
+def greedy_token(logits, vocab: int):
+    """Greedy next token over the REAL vocab only: the padded unembed tail
+    (rows added for TP divisibility, ``cfg.padded_vocab``) holds
+    random-init weights and must never be served as an output token."""
+    return jnp.argmax(logits[:, -1:, :vocab], -1).astype(jnp.int32)
+
+
+def make_decode_step(params, cfg, plan, qmode: str):
+    """The one greedy scan step shared by every decode realization (this
+    CLI's generate and the serving engine's per-bucket program): one
+    ``decode_step`` + real-vocab argmax, carry (cache, token, pos)."""
+    def step(carry, _):
+        cache, tok, pos = carry
+        logits, cache = T.decode_step(params, cache, tok, pos, cfg, plan,
+                                      qmode=qmode)
+        tok = greedy_token(logits, cfg.vocab)
+        return (cache, tok, pos + 1), tok
+
+    return step
 
 
 def make_generate(params, cfg, plan, qmode: str, prompt_len: int,
@@ -55,12 +100,7 @@ def make_generate(params, cfg, plan, qmode: str, prompt_len: int,
     reuse the (largest-buffer-in-the-request) KV cache in place.  The
     caller must not reuse the passed cache afterwards.
     """
-    def step(carry, _):
-        cache, tok, pos = carry
-        logits, cache = T.decode_step(params, cache, tok, pos, cfg, plan,
-                                      qmode=qmode)
-        tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
-        return (cache, tok, pos + 1), tok
+    step = make_decode_step(params, cfg, plan, qmode)
 
     def gen(cache, first_tok):
         (_, _, _), toks = jax.lax.scan(
@@ -89,10 +129,52 @@ def serve_once(params, cfg, plan, prompts, new_tokens: int, qmode: str,
     t0 = time.perf_counter()
     logits, cache = prefill_fn(prompts)
     cache = widen_cache(cache, S_p, S_p + new_tokens)
-    first = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+    first = greedy_token(logits, cfg.vocab)
     gen = generate_fn(cache, first)
     jax.block_until_ready(gen)
     return gen, time.perf_counter() - t0
+
+
+def run_throughput(params, cfg, qmode: str, args) -> None:
+    """Offered-load throughput mode: drive the request-level engine
+    (``repro.launch.engine``) with ``--requests`` independent prompts and
+    report requests/s + p50/p99 latency for sequential (max_batch=1) vs
+    batched dispatch, plus an offered-rate sweep.  Rows append to
+    ``results/bench_serve.json``-style output on stdout."""
+    import json
+
+    import numpy as np
+
+    from repro.launch.engine import (LMRunner, ServeEngine, run_offered_load,
+                                     warm_engine)
+    from repro.launch.mesh import make_serve_mesh
+
+    mesh = make_serve_mesh()
+    prompts = [np.random.RandomState(i)
+               .randint(0, cfg.vocab, size=(args.prompt_len,))
+               .astype(np.int32) for i in range(args.requests)]
+
+    def mk(max_batch):
+        return ServeEngine(
+            LMRunner(params, cfg, new_tokens=args.new_tokens, qmode=qmode),
+            max_batch=max_batch, flush_deadline_s=args.flush_deadline_ms / 1e3,
+            mesh=mesh)
+
+    seq = run_offered_load(warm_engine(mk(1), prompts), prompts, None)
+    eng = warm_engine(mk(args.batch), prompts)
+    bat = run_offered_load(eng, prompts, None)
+    n_dev = 1 if mesh is None else mesh.devices.size
+    print(f"arch={cfg.name} devices={n_dev} requests={args.requests} "
+          f"prompt_len={args.prompt_len} new_tokens={args.new_tokens}")
+    print(f"sequential: {seq['achieved_rps']:.1f} req/s "
+          f"p50={seq['p50_ms']}ms p99={seq['p99_ms']}ms")
+    print(f"batch={args.batch}: {bat['achieved_rps']:.1f} req/s "
+          f"p50={bat['p50_ms']}ms p99={bat['p99_ms']}ms "
+          f"({bat['achieved_rps'] / max(seq['achieved_rps'], 1e-9):.2f}x)")
+    for mult in (0.5, 1.0, 2.0, 4.0):
+        row = run_offered_load(eng, prompts,
+                               rate_rps=mult * seq["achieved_rps"])
+        print(f"offered {row['offered_rps']:>8} req/s: {json.dumps(row)}")
 
 
 def main():
@@ -110,6 +192,15 @@ def main():
                     help="quantize projection weights to int8 levels once at "
                          "model load (serve reads 4x less weight HBM and "
                          "skips per-call weight_levels)")
+    ap.add_argument("--throughput", action="store_true",
+                    help="request-level offered-load mode: queue+bucket many "
+                         "independent requests through launch/engine.py "
+                         "(data-parallel across devices) instead of one "
+                         "batched call")
+    ap.add_argument("--requests", type=int, default=32,
+                    help="--throughput: number of independent requests")
+    ap.add_argument("--flush-deadline-ms", type=float, default=2.0,
+                    help="--throughput: max bucket queueing delay")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -123,6 +214,9 @@ def main():
     if args.prequant and qmode == "serve":
         from repro.models.layers import prequantize_params
         params = prequantize_params(params, cfg)
+    if args.throughput:
+        run_throughput(params, cfg, qmode, args)
+        return
     B, S_p, S_d = args.batch, args.prompt_len, args.new_tokens
     prompts = jnp.asarray(
         lm_batch(0, 0, batch=B, seq=S_p, vocab=cfg.vocab)["tokens"])

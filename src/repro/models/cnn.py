@@ -108,14 +108,22 @@ def _serve_engine(quant: QuantConfig):
     return None if quant.engine == "auto" else quant.engine
 
 
-def _norm_act(x, g, beta, quant: QuantConfig, role: str):
+def _norm_act(x, g, beta, quant: QuantConfig, role: str, mode: str = "train"):
     """Per-channel norm (BN inference form) + bounded activation.
 
     The bounded ReLU (clip to [0,1]) is exactly DoReFa's activation domain,
     so quantize_activation is the identity structure the paper assumes.
+
+    Serve mode normalizes with PER-SAMPLE (spatial-only) statistics instead
+    of batch statistics: a served request's output must not depend on which
+    other requests the engine co-batched it with (request isolation), and
+    per-sample stats make the whole serve forward batch-invariant — the
+    bit-identity contract `launch/engine.py` batching relies on.  Training
+    keeps cross-batch statistics (the usual BN regularizer).
     """
-    mu = jnp.mean(x, axis=(0, 1, 2), keepdims=True)
-    var = jnp.var(x, axis=(0, 1, 2), keepdims=True)
+    stat_axes = (1, 2) if mode == "serve" else (0, 1, 2)
+    mu = jnp.mean(x, axis=stat_axes, keepdims=True)
+    var = jnp.var(x, axis=stat_axes, keepdims=True)
     x = (x - mu) * jax.lax.rsqrt(var + 1e-5) * g + beta
     x = jnp.clip(x, 0.0, 1.0)
     if role == "last" or quant.engine == "fp":
@@ -155,7 +163,7 @@ def cnn_forward(params, x, spec: Sequence[ConvSpec], quant: QuantConfig,
                                   jax.random.fold_in(g_key, i))
         h = h + p["b"]
         if i < len(spec) - 1:
-            h = _norm_act(h, p["g"], p["beta"], quant, s.role)
+            h = _norm_act(h, p["g"], p["beta"], quant, s.role, mode)
         if s.pool:
             h = jax.lax.reduce_window(
                 h, 0.0, jax.lax.add, (1, 2, 2, 1), (1, 2, 2, 1), "VALID") / 4.0

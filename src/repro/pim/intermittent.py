@@ -52,8 +52,14 @@ def forward_progress(n_frames: int, frame_time_us: float, mtbf_us: float,
         if checkpoint_period_frames and in_flight >= checkpoint_period_frames:
             committed += in_flight
             in_flight = 0
-    # frames surviving at the end: durable + still-powered volatile work
-    done = min(committed + in_flight, n_frames)
+    # Frames surviving at the end: if the sequence COMPLETED, the volatile
+    # tail is read out while still powered and counts.  If the budget_us
+    # hard-stop fired, only NV-committed frames are durable — volatile
+    # in_flight work dies with the next power cycle, and counting it would
+    # overstate the no-retention (P=0) baseline, which keeps *everything*
+    # volatile until the sequence end.
+    finished = committed + in_flight >= n_frames
+    done = min(committed + in_flight, n_frames) if finished else committed
     useful_us = done * frame_time_us
     return dict(
         completed_frames=int(done),

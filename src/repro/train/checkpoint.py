@@ -44,12 +44,17 @@ def _unflatten(template, flat: dict[str, np.ndarray]):
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
+class CheckpointWriteError(RuntimeError):
+    """An async checkpoint write failed after `save()` already returned."""
+
+
 class Checkpointer:
     def __init__(self, directory: str, keep: int = 3, async_save: bool = True):
         self.dir = directory
         self.keep = keep
         self.async_save = async_save
         self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
         os.makedirs(directory, exist_ok=True)
 
     # -- save ---------------------------------------------------------------
@@ -86,16 +91,36 @@ class Checkpointer:
             self._gc(tag)
 
         if self.async_save:
-            self._thread = threading.Thread(target=_write, daemon=True)
+            # A daemon thread's exception would otherwise only reach
+            # threading's default excepthook (stderr) — the caller would
+            # believe the NV write succeeded and GC the durable state it
+            # replaces.  Capture it; wait()/the next save() re-raises.
+            def _run():
+                try:
+                    _write()
+                except BaseException as e:  # noqa: BLE001 — must not be lost
+                    self._error = e
+
+            self._thread = threading.Thread(target=_run, daemon=True)
             self._thread.start()
         else:
             _write()
         return final
 
     def wait(self):
+        """Block until the in-flight save completes; raise if it failed.
+
+        A failed async write surfaces here (or at the next ``save()``,
+        which waits first) instead of being silently dropped — callers
+        treating ``wait()`` as the durability barrier get the truth.
+        """
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise CheckpointWriteError(
+                f"async checkpoint write failed: {err!r}") from err
 
     # -- restore --------------------------------------------------------------
     def latest_step(self, tag: str = "ckpt") -> Optional[int]:

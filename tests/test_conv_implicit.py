@@ -163,6 +163,14 @@ def test_select_engine_implicit_dispatch():
                          conv=tiny) in ("f32dot", "int8")
     # no conv geometry: dense dispatch unchanged
     assert select_engine(800, 576, 128, 4, 1, backend="tpu") == "fused"
+    # VMEM feasibility is in BYTES of the level dtype: a 224x224x96 image
+    # fits as int8 levels (a_bits<=7) but not as int32 levels (a_bits=8,
+    # ~19.6 MB resident > the 8 MiB budget) -> falls back to fused
+    big = ConvShape(224, 224, 3, 3, 1, "SAME")
+    assert select_engine(224 * 224, 864, 128, 4, 1, backend="tpu",
+                         conv=big) == "implicit"
+    assert select_engine(224 * 224, 864, 128, 8, 1, backend="tpu",
+                         conv=big) == "fused"
     # off-TPU feasibility: K beyond the xla realization's exactness bound
     # must fall back to the GEMM engines, not trace-crash in the kernel
     huge = ConvShape(16, 16, 3, 3, 1, "SAME")  # K = 9*8300 = 74700

@@ -1,0 +1,384 @@
+"""Request-level serving engine (launch/engine.py, DESIGN.md §7).
+
+Headline contract: batching is invisible — a request's result is
+bit-identical whether it ran alone (sequential per-request dispatch), in a
+full bucket, in a ragged padded bucket, or sharded across devices, for
+every conv engine the dispatcher can pick.  Plus the widen_cache
+regression (structural sequence-axis identification) that the engine's LM
+path depends on.
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SINGLE, all_configs
+from repro.core.quant import PAPER_CONFIGS, W1A4
+from repro.launch.engine import (BucketBatcher, CNNRunner, LMRunner, QueueFull,
+                                 Request, ServeEngine, run_offered_load)
+from repro.models import transformer as T
+from repro.models.cnn import (cnn_forward, init_cnn, prepare_serve_params,
+                              svhn_cnn_spec)
+
+
+# ---------------------------------------------------------------------------
+# BucketBatcher: pure queue/bucketing logic (no jax)
+# ---------------------------------------------------------------------------
+
+def _req(rid, payload="p", t=0.0):
+    return Request(rid, payload, t)
+
+
+def test_batcher_flushes_full_bucket():
+    b = BucketBatcher(max_batch=3, flush_deadline_s=1.0)
+    assert b.add(_req(0), "k", now=0.0) is None
+    assert b.add(_req(1), "k", now=0.0) is None
+    full = b.add(_req(2), "k", now=0.0)
+    assert full is not None and [r.rid for r in full.requests] == [0, 1, 2]
+    assert b.pending() == 0
+
+
+def test_batcher_separates_shape_keys():
+    b = BucketBatcher(max_batch=2, flush_deadline_s=1.0)
+    assert b.add(_req(0), ("cnn", 40), now=0.0) is None
+    assert b.add(_req(1), ("cnn", 32), now=0.0) is None
+    full = b.add(_req(2), ("cnn", 40), now=0.0)
+    assert full is not None and full.key == ("cnn", 40)
+    assert b.pending() == 1  # the 32-key request still queued
+
+
+def test_batcher_deadline_flush():
+    b = BucketBatcher(max_batch=8, flush_deadline_s=0.010)
+    b.add(_req(0), "k", now=0.0)
+    assert b.take_expired(now=0.005) == []       # young bucket stays
+    exp = b.take_expired(now=0.011)              # oldest waited past deadline
+    assert len(exp) == 1 and exp[0].requests[0].rid == 0
+    assert b.pending() == 0
+
+
+def test_batcher_take_all_drains_partials():
+    b = BucketBatcher(max_batch=8, flush_deadline_s=1.0)
+    b.add(_req(0), "a", now=0.0)
+    b.add(_req(1), "b", now=0.0)
+    assert sorted(bk.key for bk in b.take_all()) == ["a", "b"]
+    assert b.pending() == 0
+
+
+# ---------------------------------------------------------------------------
+# CNN path: bit-identity across engines, bucket shapes, ragged tails
+# ---------------------------------------------------------------------------
+
+SPEC = svhn_cnn_spec(8)
+_params, _ = init_cnn(jax.random.PRNGKey(0), SPEC)
+SERVE_PARAMS = prepare_serve_params(_params, SPEC, W1A4)
+IMGS = [np.random.RandomState(i).uniform(size=(16, 16, 3)).astype(np.float32)
+        for i in range(6)]
+
+
+def _cnn_engine(quant, max_batch):
+    return ServeEngine(CNNRunner(SERVE_PARAMS, SPEC, quant),
+                       max_batch=max_batch)
+
+
+@pytest.mark.parametrize("engine", ["auto", "implicit", "fused"])
+def test_cnn_batched_bit_identical_to_sequential(engine):
+    """Batched engine output == sequential per-request loop, per conv
+    engine: auto dispatch, forced implicit (patch-free), forced fused
+    (Pallas interpret)."""
+    quant = dataclasses.replace(W1A4, engine=engine)
+    n = 3 if engine == "fused" else len(IMGS)  # interpret mode is slow
+    imgs = IMGS[:n]
+    seq = _cnn_engine(quant, 1).serve(imgs)          # per-request dispatches
+    bat = _cnn_engine(quant, 4).serve(imgs)          # incl. ragged tail
+    for s, b in zip(seq, bat):
+        np.testing.assert_array_equal(s.value, b.value)
+    # and against the raw jitted batched forward, no engine machinery at all
+    ref = np.asarray(jax.jit(
+        lambda x: cnn_forward(SERVE_PARAMS, x, SPEC, quant, "serve"))(
+            jnp.asarray(np.stack(imgs))))
+    for i, b in enumerate(bat):
+        np.testing.assert_array_equal(b.value, ref[i])
+
+
+def test_cnn_ragged_buckets_and_padding_metadata():
+    """Every split of 5 requests pads its final bucket; results must not
+    see the padding (padded rows are copies of row 0, sliced off)."""
+    ref = [r.value for r in _cnn_engine(W1A4, 1).serve(IMGS[:5])]
+    for max_batch in (2, 3, 4, 8):
+        res = _cnn_engine(W1A4, max_batch).serve(IMGS[:5])
+        for i, r in enumerate(res):
+            np.testing.assert_array_equal(r.value, ref[i])
+            assert r.batch <= max_batch
+            # pow2 growth capped at bucket capacity: a FULL bucket never
+            # pads above max_batch (no dead rows on the steady-state path)
+            assert r.batch <= r.padded <= max_batch
+    # 5 reqs at max_batch=4 -> buckets of 4 and 1: the tail padded to 1
+    res = _cnn_engine(W1A4, 4).serve(IMGS[:5])
+    assert res[-1].batch == 1 and res[-1].padded == 1
+    # non-pow2 capacity: full bucket of 3 dispatches at exactly 3
+    res = _cnn_engine(W1A4, 3).serve(IMGS[:3])
+    assert all(r.batch == 3 and r.padded == 3 for r in res)
+
+
+def test_cnn_mixed_shape_buckets():
+    """Different image shapes never share a dispatch; results match the
+    per-shape references."""
+    small = [np.random.RandomState(100 + i).uniform(size=(12, 12, 3))
+             .astype(np.float32) for i in range(2)]
+    eng = _cnn_engine(W1A4, 4)
+    res = eng.serve([IMGS[0], small[0], IMGS[1], small[1]])
+    assert eng.stats["dispatches"] == 2  # one per shape key
+    ref16 = [r.value for r in _cnn_engine(W1A4, 1).serve(IMGS[:2])]
+    ref12 = [r.value for r in _cnn_engine(W1A4, 1).serve(small)]
+    np.testing.assert_array_equal(res[0].value, ref16[0])
+    np.testing.assert_array_equal(res[2].value, ref16[1])
+    np.testing.assert_array_equal(res[1].value, ref12[0])
+    np.testing.assert_array_equal(res[3].value, ref12[1])
+
+
+def test_engine_single_device_fallback_and_stats():
+    """On one device the engine must take the plain-jit path (mesh None)."""
+    from repro.launch.mesh import make_serve_mesh
+
+    if len(jax.devices()) == 1:
+        assert make_serve_mesh() is None
+    eng = _cnn_engine(W1A4, 4)
+    assert eng.mesh is None or eng._n_data == len(jax.devices())
+    res = eng.serve(IMGS[:4])
+    assert eng.stats == dict(dispatches=1, requests=4, padded_rows=0)
+    assert all(r.latency_s >= 0 for r in res)
+
+
+def test_queue_backpressure():
+    eng = ServeEngine(CNNRunner(SERVE_PARAMS, SPEC, W1A4), max_batch=4,
+                      max_pending=2)
+    eng.submit(IMGS[0])
+    eng.submit(IMGS[1])
+    with pytest.raises(QueueFull):
+        eng.submit(IMGS[2])
+    assert len(eng.drain()) == 2  # queued work is never lost to QueueFull
+    # max_pending counts REQUESTS even once buckets close: max_batch=1
+    # turns every submit into a ready bucket, and the second must still
+    # trip the bound (not slip through as "one bucket")
+    eng2 = ServeEngine(CNNRunner(SERVE_PARAMS, SPEC, W1A4), max_batch=1,
+                       max_pending=1)
+    eng2.submit(IMGS[0])
+    with pytest.raises(QueueFull):
+        eng2.submit(IMGS[1])
+
+
+def test_serve_closed_loop_survives_tiny_max_pending():
+    """serve() must complete (flushing partial buckets in place) even when
+    max_pending is smaller than a bucket — closed loop never sheds."""
+    eng = ServeEngine(CNNRunner(SERVE_PARAMS, SPEC, W1A4), max_batch=4,
+                      max_pending=2)
+    res = eng.serve(IMGS[:5])
+    assert len(res) == 5
+    ref = [r.value for r in _cnn_engine(W1A4, 1).serve(IMGS[:5])]
+    for r, v in zip(res, ref):
+        np.testing.assert_array_equal(r.value, v)
+
+
+def test_flush_deadline_dispatches_partial_bucket():
+    t = [0.0]
+    eng = ServeEngine(CNNRunner(SERVE_PARAMS, SPEC, W1A4), max_batch=8,
+                      flush_deadline_s=0.010, clock=lambda: t[0])
+    eng.submit(IMGS[0])
+    eng.pump()
+    assert not eng._results            # deadline not reached: still queued
+    t[0] = 0.011
+    eng.pump()                         # expired -> dispatched alone
+    assert 0 in eng._results and eng._results[0].batch == 1
+
+
+def test_offered_load_closed_loop_counts():
+    eng = ServeEngine(CNNRunner(SERVE_PARAMS, SPEC, W1A4), max_batch=4)
+    row = run_offered_load(eng, IMGS, rate_rps=None)
+    assert row["n_requests"] == len(IMGS)
+    assert row["achieved_rps"] > 0 and row["p99_ms"] >= row["p50_ms"]
+
+
+# ---------------------------------------------------------------------------
+# LM path: bucketing by prompt length, batched == sequential tokens
+# ---------------------------------------------------------------------------
+
+def _lm_setup():
+    cfg = dataclasses.replace(
+        all_configs()["smollm-360m"].smoke(
+            n_layers=2, d_model=64, n_heads=2, n_kv_heads=1, d_ff=128,
+            vocab=64, head_dim=32),
+        quant=PAPER_CONFIGS["w1a8"])
+    params, _ = T.init_lm(jax.random.PRNGKey(0), cfg, SINGLE)
+    return cfg, params
+
+
+def test_lm_engine_exact_vs_direct_forward_same_composition():
+    """The engine layer adds NOTHING numerically: collate/pad/stage/split
+    around a bucket reproduces a direct jitted call on the same padded
+    batch bit-for-bit (full bucket of 4 and ragged padded tail of 1).
+
+    Exact per-request-vs-batched token equality is a model-numerics
+    property, not an engine property: on CPU, XLA's reduction strategy
+    varies with the batch dimension and activation quantization amplifies
+    those ulps into level flips (same reason bench_serve reports rather
+    than asserts loop-vs-scan token match).  The integer-engine CNN path
+    above carries the strict batched==sequential bit-identity contract.
+    """
+    cfg, params = _lm_setup()
+    prompts = [np.random.RandomState(i).randint(0, cfg.vocab, size=(8,))
+               .astype(np.int32) for i in range(5)]
+    runner = LMRunner(params, cfg, new_tokens=6)
+    eng = ServeEngine(runner, max_batch=4)
+    res = eng.serve(prompts)  # buckets: [0..3] and padded [4]
+    assert eng.stats["dispatches"] == 2
+    fwd = jax.jit(runner.make_forward(runner.shape_key(prompts[0])))
+    direct4 = np.asarray(fwd(params, jnp.asarray(np.stack(prompts[:4]))))
+    direct1 = np.asarray(fwd(params, jnp.asarray(prompts[4])[None]))
+    for i in range(4):
+        np.testing.assert_array_equal(res[i].value, direct4[i])
+    np.testing.assert_array_equal(res[4].value, direct1[0])
+    assert all(r.value.shape == (6,) for r in res)
+    # tokens come from the REAL vocab, never the padded unembed tail
+    assert all(int(r.value.max()) < cfg.vocab for r in res)
+    # engine dispatch is deterministic: a fresh engine reproduces exactly
+    res2 = ServeEngine(LMRunner(params, cfg, new_tokens=6),
+                       max_batch=4).serve(prompts)
+    for a, b in zip(res, res2):
+        np.testing.assert_array_equal(a.value, b.value)
+
+
+def test_lm_engine_buckets_by_prompt_len():
+    cfg, params = _lm_setup()
+    p8 = [np.random.RandomState(i).randint(0, cfg.vocab, size=(8,))
+          .astype(np.int32) for i in range(2)]
+    p12 = [np.random.RandomState(9).randint(0, cfg.vocab, size=(12,))
+           .astype(np.int32)]
+    runner = LMRunner(params, cfg, new_tokens=4)
+    eng = ServeEngine(runner, max_batch=4)
+    res = eng.serve([p8[0], p12[0], p8[1]])
+    assert eng.stats["dispatches"] == 2  # prompt lengths never co-batch
+    # each bucket reproduces the direct forward at its own composition
+    fwd8 = jax.jit(runner.make_forward(runner.shape_key(p8[0])))
+    fwd12 = jax.jit(runner.make_forward(runner.shape_key(p12[0])))
+    d8 = np.asarray(fwd8(params, jnp.asarray(np.stack(p8))))
+    d12 = np.asarray(fwd12(params, jnp.asarray(p12[0])[None]))
+    np.testing.assert_array_equal(res[0].value, d8[0])
+    np.testing.assert_array_equal(res[2].value, d8[1])
+    np.testing.assert_array_equal(res[1].value, d12[0])
+
+
+# ---------------------------------------------------------------------------
+# widen_cache regression: structural sequence axis, not size coincidence
+# ---------------------------------------------------------------------------
+
+def test_widen_cache_ignores_size_coincidences():
+    """State tensors whose axis 2 merely EQUALS the prompt length (rec.h
+    lru width, rec.conv taps, head_dim) must pass through untouched; only
+    attention k/v/pos widen.  Pre-fix, widen_cache padded rec.h (and any
+    other ndim>=3, shape[2]==prompt_len tensor), corrupting decode."""
+    from repro.launch.serve import widen_cache
+
+    S_p = 16
+    cfg = all_configs()["recurrentgemma-9b"].smoke(
+        n_layers=3, d_model=64, n_heads=2, n_kv_heads=1, d_ff=128, vocab=64,
+        head_dim=S_p,       # head_dim == prompt_len (the issue's coincidence)
+        lru_width=S_p,      # rec.h axis 2 == prompt_len -> pre-fix corruption
+        window=8)
+    params, _ = T.init_lm(jax.random.PRNGKey(0), cfg, SINGLE)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, S_p), 0, cfg.vocab)
+    logits, cache = T.prefill(params, cfg, SINGLE, tokens=toks)
+    assert cache["rec"]["h"].shape[2] == S_p  # the trap is armed
+    w = widen_cache(cache, S_p, S_p + 8)
+    # recurrent state: untouched
+    assert w["rec"]["h"].shape == cache["rec"]["h"].shape
+    assert w["rec"]["conv"].shape == cache["rec"]["conv"].shape
+    # attention cache: widened along the slot axis, new pos slots empty
+    assert w["attn_local"]["k"].shape[2] == S_p + 8
+    assert w["attn_local"]["v"].shape[2] == S_p + 8
+    assert bool((np.asarray(w["attn_local"]["pos"])[:, :, S_p:] == -1).all())
+    # and the widened cache actually decodes
+    tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+    lg, _ = T.decode_step(params, w, tok, jnp.asarray(S_p, jnp.int32), cfg,
+                          SINGLE)
+    assert lg.shape[0] == 2 and bool(jnp.isfinite(lg).all())
+
+
+def test_widen_cache_dense_head_dim_collision():
+    """Dense attn cache with head_dim == kv_heads == prompt_len: every
+    shape-coincidence at once; k/v widen exactly once, at axis 2."""
+    from repro.launch.serve import widen_cache
+
+    S_p = 4
+    cfg = all_configs()["smollm-360m"].smoke(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=S_p, d_ff=128,
+        vocab=64, head_dim=S_p)
+    params, _ = T.init_lm(jax.random.PRNGKey(0), cfg, SINGLE)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, S_p), 0, cfg.vocab)
+    _, cache = T.prefill(params, cfg, SINGLE, tokens=toks)
+    assert cache["attn"]["k"].shape[2:] == (S_p, S_p, S_p)
+    w = widen_cache(cache, S_p, S_p + 3)
+    assert w["attn"]["k"].shape == cache["attn"]["k"].shape[:2] + (S_p + 3,
+                                                                   S_p, S_p)
+
+
+# ---------------------------------------------------------------------------
+# multi-device: shard_map data parallelism (8 forced host devices)
+# ---------------------------------------------------------------------------
+
+MD_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np, jax, jax.numpy as jnp
+from repro.core.quant import W1A4
+from repro.distributed.sharding import batch_sharding, data_parallel
+from repro.launch.engine import CNNRunner, ServeEngine
+from repro.launch.mesh import make_serve_mesh
+from repro.models.cnn import cnn_forward, init_cnn, prepare_serve_params, svhn_cnn_spec
+
+spec = svhn_cnn_spec(8)
+params, _ = init_cnn(jax.random.PRNGKey(0), spec)
+sp = prepare_serve_params(params, spec, W1A4)
+imgs = [np.random.RandomState(i).uniform(size=(16, 16, 3)).astype(np.float32)
+        for i in range(19)]  # ragged: 16 + 3
+mesh = make_serve_mesh()
+assert mesh is not None and mesh.devices.size == 8, mesh
+runner = CNNRunner(sp, spec, W1A4)
+eng = ServeEngine(runner, max_batch=16, mesh=mesh)
+res = eng.serve(imgs)
+assert eng.stats["dispatches"] == 2, eng.stats
+# ragged tail (3) padded up to the device count
+assert res[-1].padded % 8 == 0 and res[-1].batch == 3, res[-1]
+# 1) engine plumbing is exact: a direct shard_map call on the same padded
+#    batch reproduces every served row bit-for-bit
+fwd = jax.jit(data_parallel(runner.make_forward(runner.shape_key(imgs[0])), mesh))
+full = jax.device_put(runner.collate(imgs[:16], 16), batch_sharding(mesh))
+direct = np.asarray(fwd(sp, full))
+for i in range(16):
+    np.testing.assert_array_equal(res[i].value, direct[i])
+# 2) semantics match the single-device per-request path (separate compiled
+#    programs under a different device topology: fp layers drift at ulp ->
+#    quant-level scale, so allclose + class equality, not bitwise)
+f1 = jax.jit(lambda x: cnn_forward(sp, x, spec, W1A4, "serve"))
+for i, r in enumerate(res):
+    ref = np.asarray(f1(jnp.asarray(imgs[i])[None]))[0]
+    np.testing.assert_allclose(r.value, ref, rtol=2e-2, atol=2e-2)
+    assert r.value.argmax() == ref.argmax(), i
+print("MULTIDEVICE OK")
+"""
+
+
+@pytest.mark.slow
+def test_engine_multidevice_sharded_subprocess():
+    """Data-parallel shard_map dispatch on 8 forced host devices is
+    bit-identical to the single-device per-request path."""
+    env = dict(os.environ, PYTHONPATH="src")
+    env.pop("XLA_FLAGS", None)
+    p = subprocess.run([sys.executable, "-c", MD_SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=600,
+                       cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert "MULTIDEVICE OK" in p.stdout, p.stdout + p.stderr

@@ -137,7 +137,13 @@ def test_paper_cnn_forward_shapes():
 
 
 def test_cnn_train_serve_agree():
-    """Fake-quant train conv and integer-engine serve conv agree closely."""
+    """Fake-quant train conv and integer-engine serve conv agree closely.
+
+    Serve normalizes with per-sample statistics (batch-invariance contract
+    for the request-batching engine, DESIGN.md §7) while train keeps batch
+    statistics, so the tolerance covers that deliberate stats gap on top of
+    the quantization-path gap; predicted classes must still match exactly.
+    """
     from repro.core.quant import W1A4
     from repro.models.cnn import cnn_forward, init_cnn, svhn_cnn_spec
     spec = svhn_cnn_spec(8)
@@ -145,4 +151,5 @@ def test_cnn_train_serve_agree():
     x = jax.random.uniform(jax.random.PRNGKey(1), (2, 40, 40, 3))
     lt = np.asarray(cnn_forward(params, x, spec, W1A4, "train"))
     ls = np.asarray(cnn_forward(params, x, spec, W1A4, "serve"))
-    np.testing.assert_allclose(lt, ls, rtol=5e-2, atol=5e-2)
+    np.testing.assert_allclose(lt, ls, rtol=1e-1, atol=1e-1)
+    np.testing.assert_array_equal(lt.argmax(-1), ls.argmax(-1))
