@@ -1,12 +1,15 @@
 """Quickstart: train a small LM with the paper's AND-Accumulation quantized
-projections (W1A8) on synthetic data, CPU-runnable in ~a minute.
+projections (W1A8) on synthetic data, CPU-runnable in ~a minute, then
+compile the trained checkpoint into a serve ModelPlan (weights
+pre-quantized once, engines pinned) and decode a few tokens with it.
 
-  PYTHONPATH=src python examples/quickstart.py [--steps 60]
+  PYTHONPATH=src python examples/quickstart.py [--steps 60] [--quant]
 """
 import argparse
 import dataclasses
 import sys
 
+import jax
 import jax.numpy as jnp
 
 from repro.configs import SINGLE, get_config
@@ -40,7 +43,28 @@ def main():
     first, last = hist[0]["loss"], hist[-1]["loss"]
     print(f"\nloss {first:.3f} -> {last:.3f} "
           f"({'OK' if last < first else 'NO IMPROVEMENT'})")
+    if args.quant:
+        serve_with_plan(tr.params, cfg)
     return 0 if last < first else 1
+
+
+def serve_with_plan(params, cfg):
+    """Compile-once serving (the plan API): quantize projections + resolve
+    engines ONCE via ``compile_lm``, then decode with the plan active."""
+    from repro.core.plan import compile_lm
+    from repro.launch.serve import make_generate, make_prefill, serve_once
+    from repro.models import transformer as T  # noqa: F401 (arch sanity)
+
+    plan = compile_lm(params, cfg, batch_hints=(2,), prompt_len=8)
+    with plan.activate():
+        prompts = jnp.asarray(
+            lm_batch(0, 0, batch=2, seq=8, vocab=cfg.vocab)["tokens"])
+        prefill_fn = make_prefill(plan.params, cfg, SINGLE, "serve")
+        generate_fn = make_generate(plan.params, cfg, SINGLE, "serve", 8, 8)
+        gen, dt = serve_once(plan.params, cfg, SINGLE, prompts, 8, "serve",
+                             prefill_fn, generate_fn)
+    print(f"plan-served 2x8 tokens in {dt:.2f}s "
+          f"(fingerprint {plan.fingerprint()}): {list(map(int, gen[0]))}")
 
 
 if __name__ == "__main__":

@@ -1,7 +1,12 @@
-"""Batched serving example: prefill a batch of prompts, then decode with the
-KV cache (greedy), optionally with the integer AND-Accumulation engine.
+"""Batched serving example on the plan API: compile a ModelPlan once
+(projection weights pre-quantized, engine verdicts pinned), optionally
+persist it, then prefill + greedy decode with the KV cache.
 
-  PYTHONPATH=src python examples/serve_lm.py --new-tokens 16
+  PYTHONPATH=src python examples/serve_lm.py --new-tokens 16 \
+      [--quant w1a8] [--plan-cache /tmp/lmplan]
+
+With ``--plan-cache``, a second run reloads the plan from disk and skips
+requantization + engine resolution — the restarted-node fast path.
 """
 import argparse
 import sys
@@ -10,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import SINGLE, get_config
+from repro.core.quant import PAPER_CONFIGS
 from repro.data.synthetic import lm_batch
 from repro.models import transformer as T
 
@@ -20,11 +26,37 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--quant", default="w1a8", choices=list(PAPER_CONFIGS))
+    ap.add_argument("--plan-cache", default=None, metavar="PATH",
+                    help="persist/reload the compiled ModelPlan")
     args = ap.parse_args()
 
-    cfg = get_config(args.arch).smoke()
+    import dataclasses
+
+    cfg = dataclasses.replace(get_config(args.arch).smoke(),
+                              quant=PAPER_CONFIGS[args.quant])
+    qmode = "serve" if args.quant != "w32a32" else "train"
     key = jax.random.PRNGKey(0)
     params, _ = T.init_lm(key, cfg, SINGLE)
+
+    # ---- compile (or reload) the execution plan ----
+    from repro.core.plan import (check_plan_matches, compile_lm, load_plan,
+                                 plan_exists, save_plan)
+
+    if args.plan_cache and plan_exists(args.plan_cache):
+        plan = check_plan_matches(load_plan(args.plan_cache),
+                                  quant=cfg.quant, model=cfg.name)
+        print(f"plan: reloaded {args.plan_cache} "
+              f"(fingerprint {plan.fingerprint()}) — no requantization")
+    else:
+        plan = compile_lm(params, cfg, batch_hints=(args.batch,),
+                          prompt_len=args.prompt_len)
+        if args.plan_cache:
+            json_path = save_plan(plan, args.plan_cache)
+            print(f"plan: compiled and saved -> {json_path}")
+    params = plan.params
+    plan.install()  # dense GEMM dispatch becomes a plan-table lookup
+
     B, S_p, S_d = args.batch, args.prompt_len, args.new_tokens
     prompts = jnp.asarray(
         lm_batch(0, 0, batch=B, seq=S_p, vocab=cfg.vocab)["tokens"])
@@ -32,13 +64,15 @@ def main():
     # ---- prefill ----
     from repro.launch.serve import greedy_token, widen_cache
 
-    logits, cache = T.prefill(params, cfg, SINGLE, tokens=prompts)
+    logits, cache = T.prefill(params, cfg, SINGLE, tokens=prompts,
+                              qmode=qmode)
     # widen the prefill cache to the decode horizon (structural: only the
     # attention k/v/pos entries grow — see launch/serve.widen_cache)
     cache = widen_cache(cache, S_p, S_p + S_d)
 
     tok = greedy_token(logits, cfg.vocab)
-    step = jax.jit(lambda c, t, p: T.decode_step(params, c, t, p, cfg, SINGLE))
+    step = jax.jit(lambda c, t, p: T.decode_step(params, c, t, p, cfg,
+                                                 SINGLE, qmode=qmode))
 
     out = [tok]
     for t in range(S_d - 1):

@@ -158,6 +158,11 @@ def quant_conv2d_pre(
     Bit-identical to ``quant_conv2d(..., engine=<same>)``: quantization is
     elementwise so it commutes with patch extraction, zero padding maps to
     level 0 either way, and the integer GEMM is order-invariant.
+
+    On the plan-compiled serve path (``repro.core.plan``, DESIGN.md §8)
+    ``engine`` always arrives PINNED from the layer's :class:`LayerPlan` —
+    the ``engine=None`` per-call dispatch survives only for direct kernel
+    use and the benchmark baselines.
     """
     from repro.kernels import ops  # deferred: kernels layer sits above core
     from .prequant import level_dtype

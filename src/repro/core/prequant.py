@@ -9,9 +9,13 @@ call.  This module quantizes all conv/FC weights ONCE at model load into
 int8 levels + per-layer ``(s_w, z_w)``, stored in the params pytree in the
 exact GEMM layout the serve kernels consume.
 
-``prequantize_cnn_params`` is the CNN-side transform consumed by
-:func:`repro.models.cnn.prepare_serve_params`; the transformer-side
-equivalent is :func:`repro.models.layers.prequantize_params`.
+Since the ModelPlan IR (``repro.core.plan``, DESIGN.md §8) this module is
+a PLAN-CONSTRUCTION step, not a call-time decision: ``compile_model`` /
+``compile_lm`` invoke ``prequantize_cnn_params`` (CNN) or
+:func:`repro.models.layers.prequantize_params` (transformer) exactly once
+per plan, and the resulting levels serialize with the plan (npz) so a
+restarted node never requantizes.  The deprecated
+``repro.models.cnn.prepare_serve_params`` shim still reaches it directly.
 """
 from __future__ import annotations
 

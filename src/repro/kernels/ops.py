@@ -4,11 +4,18 @@ On CPU (this container) kernels run with ``interpret=True`` for
 correctness validation; on TPU they compile natively. The wrappers also
 own layout plumbing: bit-plane packing for the faithful kernel and
 nibble-splitting for >7-bit operands on the MXU kernel.
+
+Engine selection is layered (DESIGN.md §8): :func:`select_engine` first
+consults an installed :class:`repro.core.plan.ModelPlan` dense-GEMM table,
+then the measured-autotune cache, and only then falls back to the pure
+heuristic :func:`cost_model_engine` — so a compiled plan turns every
+per-call dispatch decision into a table lookup.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 
 import jax
 import jax.numpy as jnp
@@ -102,10 +109,98 @@ IMPLICIT_CPU_M_AMP_MIN = 2500
 IMPLICIT_CPU_KDIM_MIN = 128
 
 
+# ---------------------------------------------------------------------------
+# Plan table + autotune cache: ahead-of-time verdicts consulted by
+# select_engine before the heuristic cost model fires.
+# ---------------------------------------------------------------------------
+
+# Dense-GEMM verdicts installed by an active ModelPlan (core/plan.py).  Keys
+# are :func:`dense_plan_key` tuples; installed/removed by ModelPlan.activate
+# or .install.  Per-layer CONV verdicts never go through this table — the
+# plan pins them as explicit ``engine=`` arguments on the conv call.
+_PLAN_TABLE: dict = {}
+
+# Measured verdicts from autotune passes: key -> (engine, {engine: us}).
+# Populated by :func:`autotune_engine`; persisted/restored through plan
+# serialization so a restarted node never re-measures.
+_AUTOTUNE_CACHE: dict = {}
+
+# Monotonic counter bumped whenever a cached verdict changes; structural
+# plan caches (core/plan.py) key on it so stale engine choices never
+# survive a plan install/removal or a new autotune measurement.
+_DISPATCH_EPOCH = [0]
+
+
+def dispatch_epoch() -> int:
+    return _DISPATCH_EPOCH[0]
+
+
+def dense_plan_key(k: int, n: int, a_bits: int, w_bits: int,
+                   backend: str) -> tuple:
+    """Plan-table key for a dense serve GEMM.
+
+    Deliberately ``m``-free: a weight's engine verdict must hold for every
+    batch/sequence the server dispatches (off-TPU the heuristic is already
+    m-independent — ``f32dot_exact`` depends only on k and the bit widths)
+    so one plan entry covers prefill and decode alike.
+    """
+    return ("dense", k, n, a_bits, w_bits, backend)
+
+
+def autotune_key(m: int, k: int, n: int, a_bits: int, w_bits: int,
+                 backend: str, conv: ConvShape | None) -> tuple:
+    if conv is not None:
+        return ("conv", conv.h, conv.w, conv.kh, conv.kw, conv.stride,
+                conv.padding, conv.batch, k, n, a_bits, w_bits, backend)
+    return ("dense", m, k, n, a_bits, w_bits, backend)
+
+
+def install_plan_table(entries: dict) -> None:
+    """Install a ModelPlan's dense engine verdicts (additive)."""
+    _PLAN_TABLE.update(entries)
+    _DISPATCH_EPOCH[0] += 1
+
+
+def remove_plan_table(entries: dict) -> None:
+    for key in entries:
+        _PLAN_TABLE.pop(key, None)
+    _DISPATCH_EPOCH[0] += 1
+
+
+def clear_plan_state() -> None:
+    """Drop every installed plan verdict and autotune measurement."""
+    _PLAN_TABLE.clear()
+    _AUTOTUNE_CACHE.clear()
+    _DISPATCH_EPOCH[0] += 1
+
+
 def select_engine(m: int, k: int, n: int, a_bits: int, w_bits: int,
                   backend: str | None = None,
                   conv: ConvShape | None = None) -> str:
     """Pick the serve engine for an (m, k) x (k, n) quantized GEMM.
+
+    Resolution order: (1) an installed ModelPlan's dense table
+    (:func:`install_plan_table`), (2) the measured autotune cache
+    (:func:`autotune_engine` verdicts), (3) the pure heuristic
+    :func:`cost_model_engine`.  With no plan active and no autotune run,
+    this is exactly the heuristic — the no-autotune default.
+    """
+    backend = backend or jax.default_backend()
+    if conv is None:
+        hit = _PLAN_TABLE.get(dense_plan_key(k, n, a_bits, w_bits, backend))
+        if hit is not None:
+            return hit
+    tuned = _AUTOTUNE_CACHE.get(autotune_key(m, k, n, a_bits, w_bits,
+                                             backend, conv))
+    if tuned is not None:
+        return tuned[0]
+    return cost_model_engine(m, k, n, a_bits, w_bits, backend, conv)
+
+
+def cost_model_engine(m: int, k: int, n: int, a_bits: int, w_bits: int,
+                      backend: str | None = None,
+                      conv: ConvShape | None = None) -> str:
+    """The pure heuristic cost model (no caches, no measurement).
 
     Returns one of:
       ``fused``     one-pass Pallas kernel (quantize + MXU matmul + rowsum +
@@ -169,6 +264,164 @@ def select_engine(m: int, k: int, n: int, a_bits: int, w_bits: int,
             and implicit_xla_exact(k, a_bits, w_bits)):
         return "implicit"
     return "f32dot" if f32dot_exact(k, a_bits, w_bits) else "int8"
+
+
+# ---------------------------------------------------------------------------
+# Feasibility + candidates: plan-time validation and autotune enumeration
+# ---------------------------------------------------------------------------
+
+# Engines the level-GEMM realization layer accepts everywhere (slow but
+# exact on any backend) vs the Pallas kernels that only COMPILE on TPU
+# (they still *run* off-TPU under interpret=True, which is a correctness
+# harness, not a production engine — plan compilation rejects them there).
+PORTABLE_ENGINES = ("planes", "packed", "int8", "int8_planewise", "f32dot")
+PALLAS_ENGINES = ("fused", "faithful")
+
+
+def engine_feasible(engine: str, m: int, k: int, n: int, a_bits: int,
+                    w_bits: int, backend: str | None = None,
+                    conv: ConvShape | None = None) -> tuple[bool, str]:
+    """Can ``engine`` legally realize this problem on ``backend``?
+
+    Returns ``(ok, reason)`` — ``reason`` explains a False verdict in plan
+    error messages.  "Feasible" means *production-feasible*: exact AND
+    natively compilable.  Pallas kernels off-TPU only interpret (orders of
+    magnitude slow), so they are rejected here even though the permissive
+    call-time path still accepts them for correctness testing.
+    """
+    backend = backend or jax.default_backend()
+    if engine == "implicit":
+        if conv is None:
+            return False, "implicit is a conv engine (no conv geometry here)"
+        if conv.kh * conv.kw <= 1:
+            return False, "1x1 conv has no patch amplification (im2col is the identity)"
+        if conv.stride not in IMPLICIT_STRIDES:
+            return False, f"stride {conv.stride} unsupported (kernel sweep handles {IMPLICIT_STRIDES})"
+        if conv.padding not in ("SAME", "VALID"):
+            return False, f"padding {conv.padding!r} unsupported"
+        if backend == "tpu":
+            from repro.core.prequant import level_dtype
+
+            cin = k // max(conv.kh * conv.kw, 1)
+            lvl_bytes = jnp.zeros((), level_dtype(a_bits)).dtype.itemsize
+            if conv.padded_image_elems(cin) * lvl_bytes > IMPLICIT_VMEM_BYTES:
+                return False, (
+                    f"image levels ({conv.padded_image_elems(cin) * lvl_bytes}"
+                    f" B) exceed the {IMPLICIT_VMEM_BYTES} B VMEM residency"
+                    " budget")
+            return True, ""
+        if not implicit_xla_exact(k, a_bits, w_bits):
+            return False, (
+                f"off-TPU direct conv inexact at K={k}, a_bits={a_bits}, "
+                f"w_bits={w_bits} (group product exceeds the fp32 mantissa)")
+        return True, ""
+    if engine in PALLAS_ENGINES:
+        if backend != "tpu":
+            return False, (f"'{engine}' is a Pallas TPU kernel "
+                           f"(interpret-only on {backend})")
+        return True, ""
+    if engine == "f32dot":
+        if not f32dot_exact(k, a_bits, w_bits):
+            return False, (
+                f"f32dot inexact at K={k}, a_bits={a_bits}, w_bits={w_bits} "
+                "(accumulator exceeds the fp32 mantissa)")
+        return True, ""
+    if engine in PORTABLE_ENGINES:
+        return True, ""
+    return False, f"unknown engine {engine!r}"
+
+
+def candidate_engines(m: int, k: int, n: int, a_bits: int, w_bits: int,
+                      backend: str | None = None,
+                      conv: ConvShape | None = None) -> list[str]:
+    """Feasible engines worth timing for this problem, best-guess first.
+
+    The bit-plane loop engines (planes/packed/int8_planewise) are excluded:
+    they exist for paper fidelity and are never latency-competitive, so
+    timing them would only slow the autotune pass down.
+    """
+    backend = backend or jax.default_backend()
+    order = ("implicit", "fused", "faithful", "f32dot", "int8")
+    out = []
+    for eng in order:
+        if eng == "faithful" and not (a_bits == 1 and w_bits == 1):
+            continue  # competitive only for binary operands
+        ok, _ = engine_feasible(eng, m, k, n, a_bits, w_bits, backend, conv)
+        if ok:
+            out.append(eng)
+    return out
+
+
+def _time_engine(fn, *args, repeats: int = 3) -> float:
+    """Best-of-``repeats`` wall microseconds for a compiled call."""
+    jax.block_until_ready(fn(*args))  # compile + warm
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def autotune_engine(m: int, k: int, n: int, a_bits: int, w_bits: int,
+                    backend: str | None = None,
+                    conv: ConvShape | None = None,
+                    repeats: int = 3) -> tuple[str, dict[str, float]]:
+    """MEASURE candidate engines on the live backend; cache the verdict.
+
+    Returns ``(best_engine, {engine: best_us})``.  Dummy integer levels at
+    the real problem shape stand in for data (engine latency is
+    value-independent).  Verdicts are cached per problem key — a plan
+    compile touches each distinct layer shape once, and plan serialization
+    persists the cache so a restarted node skips the measurement entirely.
+    Only runs when the requested backend IS the live backend (you cannot
+    measure a TPU from a CPU host); otherwise falls back to the cost model.
+    """
+    import numpy as np
+
+    backend = backend or jax.default_backend()
+    key = autotune_key(m, k, n, a_bits, w_bits, backend, conv)
+    hit = _AUTOTUNE_CACHE.get(key)
+    if hit is not None:
+        return hit
+    heuristic = cost_model_engine(m, k, n, a_bits, w_bits, backend, conv)
+    if backend != jax.default_backend():
+        return heuristic, {}
+    cands = candidate_engines(m, k, n, a_bits, w_bits, backend, conv)
+    if len(cands) < 2:
+        verdict = (cands[0] if cands else heuristic, {})
+        _AUTOTUNE_CACHE[key] = verdict
+        _DISPATCH_EPOCH[0] += 1
+        return verdict
+    rng = np.random.RandomState(0)
+    from repro.core.prequant import level_dtype
+
+    w_lv = jnp.asarray(rng.randint(0, (1 << w_bits), size=(k, n)),
+                       level_dtype(w_bits))
+    s_w = jnp.asarray(2.0 / max((1 << w_bits) - 1, 1), jnp.float32)
+    z_w = jnp.asarray(((1 << w_bits) - 1) / 2.0, jnp.float32)
+    timings: dict[str, float] = {}
+    for eng in cands:
+        if conv is not None:
+            cin = k // (conv.kh * conv.kw)
+            x_lv = jnp.asarray(
+                rng.randint(0, (1 << a_bits),
+                            size=(conv.batch, conv.h, conv.w, cin)),
+                level_dtype(a_bits))
+            fn = jax.jit(functools.partial(
+                quant_conv_serve, kh=conv.kh, kw=conv.kw, stride=conv.stride,
+                padding=conv.padding, a_bits=a_bits, w_bits=w_bits,
+                engine=eng))
+        else:
+            x_lv = jnp.asarray(rng.randint(0, (1 << a_bits), size=(m, k)),
+                               level_dtype(a_bits))
+            fn = jax.jit(functools.partial(
+                quant_dense_serve, a_bits=a_bits, w_bits=w_bits, engine=eng))
+        timings[eng] = _time_engine(fn, x_lv, w_lv, s_w, z_w, repeats=repeats)
+    best = min(timings, key=timings.get)
+    _AUTOTUNE_CACHE[key] = (best, timings)
+    _DISPATCH_EPOCH[0] += 1
+    return best, timings
 
 
 def fused_qgemm(a: jax.Array, w_lv: jax.Array, s_w, z_w, *, a_bits: int,

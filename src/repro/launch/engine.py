@@ -139,16 +139,23 @@ def _split_rows(host_out: np.ndarray, n: int) -> list[np.ndarray]:
 class CNNRunner:
     """Batched CNN serve forward (image (H, W, C) -> logits row).
 
-    ``params`` should come from :func:`repro.models.cnn.prepare_serve_params`
-    (weights quantized once at load); float checkpoints also work (the
-    forward prequantizes on the fly).  ``quant.engine`` selects the conv
-    engine explicitly, or "auto" for backend/shape dispatch.
+    Preferred construction is from a compiled plan
+    (:func:`repro.core.plan.compile_model`): ``CNNRunner(None, spec, None,
+    plan=plan)`` — params and quant come from the plan, every layer's
+    engine is pinned ahead of dispatch, and the engine's program cache is
+    keyed on the plan fingerprint.  The legacy form (explicit
+    params/quant, per-trace structural planning) still works; float
+    checkpoints prequantize at trace time.
     """
 
-    def __init__(self, params, spec, quant):
-        self.params = params
+    def __init__(self, params, spec, quant, plan=None):
+        self.plan = plan
+        self.params = plan.params if plan is not None else params
         self.spec = spec
-        self.quant = quant
+        self.quant = plan.quant if plan is not None else quant
+
+    def plan_fingerprint(self):
+        return None if self.plan is None else self.plan.fingerprint()
 
     def shape_key(self, payload) -> tuple:
         return ("cnn",) + tuple(payload.shape)
@@ -157,9 +164,18 @@ class CNNRunner:
         return _collate(payloads, pad_to, np.float32)
 
     def make_forward(self, key) -> Callable:
-        from repro.models.cnn import cnn_forward
+        spec, quant, plan = self.spec, self.quant, self.plan
 
-        spec, quant = self.spec, self.quant
+        if plan is not None:
+            from repro.core.plan import plan_forward
+
+            def fwd(params, x):
+                # params arrive as jit arguments (device-put replicas);
+                # the plan supplies structure + engines only
+                return plan_forward(plan, x, params=params)
+
+            return fwd
+        from repro.models.cnn import cnn_forward
 
         def fwd(params, x):
             return cnn_forward(params, x, spec, quant, "serve")
@@ -178,14 +194,19 @@ class LMRunner:
     """
 
     def __init__(self, params, cfg, *, new_tokens: int, qmode: str = "serve",
-                 plan=None):
+                 plan=None, model_plan=None):
         from repro.configs import SINGLE
 
-        self.params = params
+        self.model_plan = model_plan  # compiled ModelPlan (core/plan.py)
+        self.params = model_plan.params if model_plan is not None else params
         self.cfg = cfg
         self.new_tokens = new_tokens
         self.qmode = qmode
-        self.plan = plan or SINGLE
+        self.plan = plan or SINGLE    # sharding plan (configs.SINGLE-style)
+
+    def plan_fingerprint(self):
+        return (None if self.model_plan is None
+                else self.model_plan.fingerprint())
 
     def shape_key(self, payload) -> tuple:
         return ("lm", int(np.asarray(payload).shape[-1]), self.new_tokens)
@@ -194,24 +215,33 @@ class LMRunner:
         return _collate(payloads, pad_to, np.int32)
 
     def make_forward(self, key) -> Callable:
+        import contextlib
+
         from repro.launch.serve import (greedy_token, make_decode_step,
                                         widen_cache)
         from repro.models import transformer as T
 
         _, prompt_len, new_tokens = key
         cfg, plan, qmode = self.cfg, self.plan, self.qmode
+        model_plan = self.model_plan
         slots = prompt_len + new_tokens
 
         def fwd(params, toks):
-            logits, cache = T.prefill(params, cfg, plan, tokens=toks,
-                                      qmode=qmode)
-            cache = widen_cache(cache, prompt_len, slots)
-            first = greedy_token(logits, cfg.vocab)
-            step = make_decode_step(params, cfg, plan, qmode)
-            (_, _, _), toks_out = jax.lax.scan(
-                step, (cache, first, jnp.asarray(prompt_len, jnp.int32)),
-                None, length=new_tokens - 1)
-            return jnp.concatenate([first, toks_out[:, :, 0].T], axis=1)
+            # activate() covers jit TRACE time: projection GEMMs dispatch
+            # through the plan's dense verdict table; the compiled program
+            # keeps those engines for its lifetime
+            ctx = (model_plan.activate() if model_plan is not None
+                   else contextlib.nullcontext())
+            with ctx:
+                logits, cache = T.prefill(params, cfg, plan, tokens=toks,
+                                          qmode=qmode)
+                cache = widen_cache(cache, prompt_len, slots)
+                first = greedy_token(logits, cfg.vocab)
+                step = make_decode_step(params, cfg, plan, qmode)
+                (_, _, _), toks_out = jax.lax.scan(
+                    step, (cache, first, jnp.asarray(prompt_len, jnp.int32)),
+                    None, length=new_tokens - 1)
+                return jnp.concatenate([first, toks_out[:, :, 0].T], axis=1)
 
         return fwd
 
@@ -347,7 +377,11 @@ class ServeEngine:
         return padded
 
     def _executable(self, key, padded: int):
-        cache_key = (key, padded)
+        # program cache keyed on (shape key, padded batch, PLAN): two plans
+        # over the same shapes (e.g. heuristic vs autotuned engines) must
+        # never share a compiled program
+        plan_fp = getattr(self.runner, "plan_fingerprint", lambda: None)()
+        cache_key = (key, padded, plan_fp)
         if cache_key not in self._fns:
             fwd = self.runner.make_forward(key)
             # _pad_to guarantees device-divisible batches in mesh mode

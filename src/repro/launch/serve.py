@@ -135,7 +135,7 @@ def serve_once(params, cfg, plan, prompts, new_tokens: int, qmode: str,
     return gen, time.perf_counter() - t0
 
 
-def run_throughput(params, cfg, qmode: str, args) -> None:
+def run_throughput(params, cfg, qmode: str, args, model_plan=None) -> None:
     """Offered-load throughput mode: drive the request-level engine
     (``repro.launch.engine``) with ``--requests`` independent prompts and
     report requests/s + p50/p99 latency for sequential (max_batch=1) vs
@@ -156,7 +156,8 @@ def run_throughput(params, cfg, qmode: str, args) -> None:
 
     def mk(max_batch):
         return ServeEngine(
-            LMRunner(params, cfg, new_tokens=args.new_tokens, qmode=qmode),
+            LMRunner(params, cfg, new_tokens=args.new_tokens, qmode=qmode,
+                     model_plan=model_plan),
             max_batch=max_batch, flush_deadline_s=args.flush_deadline_ms / 1e3,
             mesh=mesh)
 
@@ -190,8 +191,19 @@ def main():
     ap.add_argument("--quant", default=None, choices=list(PAPER_CONFIGS))
     ap.add_argument("--prequant", action="store_true",
                     help="quantize projection weights to int8 levels once at "
-                         "model load (serve reads 4x less weight HBM and "
-                         "skips per-call weight_levels)")
+                         "model load (deprecated: --plan-cache subsumes this "
+                         "and also pins engines + persists to disk)")
+    ap.add_argument("--plan-cache", default=None, metavar="PATH",
+                    help="compile-once execution plan (repro.core.plan): if "
+                         "PATH.json exists, reload it — a restarted node "
+                         "skips requantization and autotuning entirely (the "
+                         "intermittency-resume fast path); otherwise compile "
+                         "the plan (prequant + engine resolution) and save "
+                         "it there")
+    ap.add_argument("--autotune", action="store_true",
+                    help="with --plan-cache: MEASURE candidate engines per "
+                         "GEMM shape on the live backend instead of trusting "
+                         "the heuristic cost model")
     ap.add_argument("--throughput", action="store_true",
                     help="request-level offered-load mode: queue+bucket many "
                          "independent requests through launch/engine.py "
@@ -211,11 +223,36 @@ def main():
     qmode = "serve" if args.quant and args.quant != "w32a32" else "train"
 
     params, _ = T.init_lm(jax.random.PRNGKey(0), cfg, SINGLE)
-    if args.prequant and qmode == "serve":
+    model_plan = None
+    if args.plan_cache and qmode == "serve":
+        from repro.core.plan import (check_plan_matches, compile_lm,
+                                     load_plan, plan_exists, save_plan)
+
+        base = args.plan_cache
+        t0 = time.perf_counter()
+        if plan_exists(base):
+            # refuse a plan compiled under a different quant/arch: wrong
+            # bit widths would silently decode the stored integer levels
+            # into garbage rather than erroring on shapes
+            model_plan = check_plan_matches(load_plan(base), quant=cfg.quant,
+                                            model=cfg.name)
+            print(f"plan: reloaded {base} in "
+                  f"{(time.perf_counter() - t0) * 1e3:.1f}ms (requantization "
+                  f"+ autotune skipped)")
+        else:
+            model_plan = compile_lm(params, cfg, batch_hints=(args.batch,),
+                                    prompt_len=args.prompt_len,
+                                    autotune=args.autotune)
+            json_path = save_plan(model_plan, base)
+            print(f"plan: compiled{' +autotune' if args.autotune else ''} in "
+                  f"{(time.perf_counter() - t0) * 1e3:.1f}ms -> {json_path}")
+        params = model_plan.params
+        model_plan.install()  # dense GEMM dispatch becomes a table lookup
+    elif args.prequant and qmode == "serve":
         from repro.models.layers import prequantize_params
         params = prequantize_params(params, cfg)
     if args.throughput:
-        run_throughput(params, cfg, qmode, args)
+        run_throughput(params, cfg, qmode, args, model_plan=model_plan)
         return
     B, S_p, S_d = args.batch, args.prompt_len, args.new_tokens
     prompts = jnp.asarray(

@@ -6,25 +6,27 @@
 * ``alexnet`` — binary-weight AlexNet used for the ImageNet storage /
   energy rows (Fig. 8b, Table II).
 
-Every quantized conv runs the AND-Accumulation engine via
-:func:`repro.core.conv_lowering.quant_conv2d_pre` (inference/serve mode —
-weights pre-quantized at load by :func:`prepare_serve_params`, or on the
-fly for float checkpoints; the engine dispatcher picks the patch-free
-implicit-GEMM kernel for deep-K spatial convs) or a fake-quant STE conv
-(training mode).
+Serve mode executes a compiled execution plan (``repro.core.plan``): the
+per-layer engine choices, weight pre-quantization, and feasibility checks
+all happen ONCE at plan-compile time, and ``cnn_forward(mode="serve")``
+just walks the LayerPlan sequence — no per-call dispatch, no
+float-vs-prequant branching in the forward.  Training mode keeps the
+fake-quant STE conv.  ``prepare_serve_params`` survives as a deprecation
+shim over :func:`repro.core.plan.compile_model`.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
+import warnings
 from functools import partial
 from typing import Sequence
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.conv_lowering import conv2d_float, quant_conv2d_pre
-from repro.core.prequant import is_fp_layer, prequantize_conv_weight
+from repro.core.conv_lowering import conv2d_float
+from repro.core.prequant import is_fp_layer
 from repro.core.quant import (
     QuantConfig,
     quantize_activation,
@@ -89,23 +91,21 @@ def init_cnn(key, spec: Sequence[ConvSpec], dtype=jnp.float32):
 
 
 def prepare_serve_params(params, spec: Sequence[ConvSpec], quant: QuantConfig):
-    """Quantize all conv/FC weights ONCE at model load for serving.
+    """DEPRECATED shim (one release): quantize conv/FC weights at load.
 
-    Returns a serve-params pytree where every quantized layer stores int8
-    levels + (s_w, z_w) in GEMM layout instead of float weights — the TPU
-    analogue of keeping C_n(W) resident in the SOT-MRAM sub-array.
-    ``cnn_forward(mode="serve")`` detects the pre-quantized entries and runs
-    the fused pipeline; outputs are bit-identical to serving the float
-    params (which re-quantize per call).
+    Use :func:`repro.core.plan.compile_model` instead — it performs the
+    same pre-quantization as one step of plan construction and additionally
+    pins engines, validates overrides, and serializes to disk.  Output is
+    identical to ``compile_model(...).params``.
     """
+    warnings.warn(
+        "prepare_serve_params is deprecated; use "
+        "repro.core.plan.compile_model(params, spec, quant).params "
+        "(removal in the next release)",
+        DeprecationWarning, stacklevel=2)
     from repro.core.prequant import prequantize_cnn_params
 
     return prequantize_cnn_params(params, spec, quant)
-
-
-def _serve_engine(quant: QuantConfig):
-    """Explicit bitwise-engine override, or None for backend/shape dispatch."""
-    return None if quant.engine == "auto" else quant.engine
 
 
 def _norm_act(x, g, beta, quant: QuantConfig, role: str, mode: str = "train"):
@@ -133,7 +133,20 @@ def _norm_act(x, g, beta, quant: QuantConfig, role: str, mode: str = "train"):
 
 def cnn_forward(params, x, spec: Sequence[ConvSpec], quant: QuantConfig,
                 mode: str = "train", g_key=None):
-    """x (B,H,W,3) in [0,1]. Returns logits (B, n_classes)."""
+    """x (B,H,W,3) in [0,1]. Returns logits (B, n_classes).
+
+    Serve mode compiles (or reuses — the structural pass is cached) an
+    execution plan for this (spec, quant, shape, backend) and executes it:
+    engine choices are made once per compiled program, not once per layer
+    call.  Bit-identical to the pre-plan per-call dispatch — the plan's
+    heuristic resolution IS that dispatch, hoisted to trace time.
+    """
+    if mode == "serve":
+        from repro.core.plan import cnn_serve_layers, execute_cnn_layers
+
+        layers = cnn_serve_layers(spec, quant, batch=x.shape[0],
+                                  img_hw=(x.shape[1], x.shape[2]))
+        return execute_cnn_layers(layers, params, x, quant)
     h = x
     for i, (p, s) in enumerate(zip(params, spec)):
         pad = "VALID" if (s.fc or s.k == 1) else "SAME"
@@ -143,22 +156,11 @@ def cnn_forward(params, x, spec: Sequence[ConvSpec], quant: QuantConfig,
         fp_layer = is_fp_layer(s, quant)
         if fp_layer:
             h = conv2d_float(h, p["w"], stride=s.stride, padding=pad)
-        elif mode == "serve":
-            if "w_lv" in p:  # pre-quantized serve params (prepare_serve_params)
-                w_lv, s_w, z_w = p["w_lv"], p["s_w"], p["z_w"]
-            else:  # float checkpoint: quantize weights on the fly — the
-                # conv itself still runs the patch-free fused/implicit
-                # pipeline (the f32-im2col serve path is gone)
-                w_lv, s_w, z_w = prequantize_conv_weight(p["w"], quant.w_bits)
-            h = quant_conv2d_pre(
-                h, w_lv, s_w, z_w, kh=s.k, kw=s.k,
-                stride=s.stride, padding=pad, a_bits=quant.a_bits,
-                w_bits=quant.w_bits, engine=_serve_engine(quant))
         else:  # fake-quant STE training conv
             wq = quantize_weight(p["w"], quant.w_bits)
             hq = h  # already quantized by the previous _norm_act
             h = conv2d_float(hq, wq, stride=s.stride, padding=pad)
-        if mode == "train" and g_key is not None and not fp_layer:
+        if g_key is not None and not fp_layer:
             h = quantize_gradient(h, quant.g_bits,
                                   jax.random.fold_in(g_key, i))
         h = h + p["b"]

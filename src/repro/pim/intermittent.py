@@ -17,11 +17,20 @@ from repro.core.compressor import NVFATiming
 
 def forward_progress(n_frames: int, frame_time_us: float, mtbf_us: float,
                      checkpoint_period_frames: int, nv_write_us: float = 1.0,
-                     m_bits: int = 1, n_bits: int = 8, seed: int = 0) -> dict:
+                     m_bits: int = 1, n_bits: int = 8, seed: int = 0,
+                     resume_us: float = 0.0) -> dict:
     """Simulate until n_frames complete; returns progress statistics.
 
     checkpoint_period_frames = 0 -> no NV retention (volatile baseline):
     a power failure discards ALL frames since the sequence start.
+
+    ``resume_us`` models the RESTART overhead paid after every power
+    failure before the first post-failure frame can run — the software
+    analogue of re-deriving the execution mapping.  A node without a
+    persisted ModelPlan re-quantizes weights, re-runs engine
+    selection/autotune, and recompiles (large ``resume_us``); a node with
+    a plan on disk (``core/plan.save_plan``) just reloads it (small).
+    :func:`plan_resume_study` sweeps exactly this comparison.
     """
     rng = np.random.RandomState(seed)
     t = 0.0
@@ -37,11 +46,24 @@ def forward_progress(n_frames: int, frame_time_us: float, mtbf_us: float,
         if checkpoint_period_frames and (in_flight + 1) % checkpoint_period_frames == 0:
             frame_cost += nv_write_us
         if next_fail < frame_cost:
-            # power lost mid-frame: lose in-flight work (plus the current frame)
+            # power lost mid-frame: lose in-flight work (plus the current
+            # frame), then pay the restart/replan overhead — which runs on
+            # the SAME failure-prone supply, so a long replan can itself be
+            # interrupted and must restart from scratch (this compounding
+            # is exactly why persisting the plan matters)
             failures += 1
             lost = in_flight if checkpoint_period_frames else committed + in_flight
             wasted_us += lost * frame_time_us + next_fail
             t += next_fail
+            while resume_us > 0.0 and t < budget_us:
+                resume_fail = rng.exponential(mtbf_us)
+                if resume_fail >= resume_us:
+                    t += resume_us
+                    wasted_us += resume_us
+                    break
+                failures += 1
+                t += resume_fail
+                wasted_us += resume_fail
             if checkpoint_period_frames:
                 in_flight = 0
             else:
@@ -78,3 +100,28 @@ def sweep_checkpoint_period(periods=(0, 1, 2, 5, 10, 20, 50),
     paper's default; higher periods trade resilience for write energy)."""
     return {p: forward_progress(n_frames, frame_time_us, mtbf_us, p)
             for p in periods}
+
+
+def plan_resume_study(compile_us: float, plan_load_us: float,
+                      checkpoint_period_frames: int = 20,
+                      mtbf_us: float = 500.0, n_frames: int = 500,
+                      frame_time_us: float = 100.0, seed: int = 0) -> dict:
+    """Restart-cost study: persisted ModelPlan vs full replan per failure.
+
+    The paper's node resumes instantly because its execution mapping lives
+    in non-volatile sub-arrays; our software analogue only matches that
+    when the compiled plan (prequantized levels + engine verdicts) is on
+    disk.  ``compile_us`` is the measured cold compile+autotune cost,
+    ``plan_load_us`` the measured ``load_plan`` cost — both come from
+    ``benchmarks/bench_serve.plan_rows``.  Same failure seed on both arms,
+    so the delta is purely the resume overhead.
+    """
+    kw = dict(n_frames=n_frames, frame_time_us=frame_time_us,
+              mtbf_us=mtbf_us,
+              checkpoint_period_frames=checkpoint_period_frames, seed=seed)
+    recompile = forward_progress(resume_us=compile_us, **kw)
+    reload_ = forward_progress(resume_us=plan_load_us, **kw)
+    return dict(
+        recompile=recompile, plan_reload=reload_,
+        efficiency_gain=(reload_["efficiency"]
+                         / max(recompile["efficiency"], 1e-12)))
