@@ -68,10 +68,11 @@ def _layer_rows(name, spec, img: int, batch: int, quant, n: int):
     from repro.core.conv_lowering import quant_conv2d, quant_conv2d_pre
     from repro.core.prequant import is_fp_layer, level_dtype
     from repro.kernels.ops import ConvShape, select_engine
-    from repro.models.cnn import init_cnn, prepare_serve_params
+    from repro.core.prequant import prequantize_cnn_params
+    from repro.models.cnn import init_cnn
 
     params, _ = init_cnn(jax.random.PRNGKey(0), spec)
-    serve_params = prepare_serve_params(params, spec, quant)
+    serve_params = prequantize_cnn_params(params, spec, quant)
     itemsize = jax.numpy.zeros((), level_dtype(quant.a_bits)).dtype.itemsize
 
     rows = []

@@ -7,9 +7,9 @@ CNN e2e compares three dataflows (layer-level numbers live in
                 re-quantized by ``weight_levels`` every call, f32 im2col
                 patches, hardwired ``engine="int8"`` GEMM, separate
                 rowsum/epilogue pass;
-  ``gemm``      PR-1 pipeline: ``prepare_serve_params`` weights, integer
-                ``im2col_sliced`` patches, dispatched qGEMM (patches still
-                materialize in HBM);
+  ``gemm``      PR-1 pipeline: pre-quantized (``core/prequant``) weights,
+                integer ``im2col_sliced`` patches, dispatched qGEMM
+                (patches still materialize in HBM);
   ``fused``     this PR's auto dispatch — deep-K spatial convs route to
                 the implicit-GEMM engine (no patch bytes), the rest to the
                 PR-1 engines.

@@ -91,7 +91,7 @@ def fig8_storage():
 # --- Fig. 9 / Fig. 10 / Table II: energy & throughput ----------------------
 
 def fig9_energy():
-    from repro.pim import accelsim as A
+    from repro.api import reports as A
     out = []
     for (w, i) in [(1, 1), (1, 4), (1, 8), (2, 2)]:
         for design in ("proposed", "imce", "reram", "asic"):
@@ -104,7 +104,7 @@ def fig9_energy():
 
 
 def fig10_performance():
-    from repro.pim import accelsim as A
+    from repro.api import reports as A
     out = []
     for design in ("proposed", "imce", "reram", "asic"):
         r = A.simulate(design, "imagenet", 1, 1)
@@ -115,7 +115,7 @@ def fig10_performance():
 
 
 def table2_energy_area():
-    from repro.pim import accelsim as A
+    from repro.api import reports as A
     t2 = A.table2()
     rows = []
     for d, cols in t2.items():
@@ -125,6 +125,17 @@ def table2_energy_area():
                              energy_uj=round(v["energy_uj"], 2),
                              paper_energy_uj=paper_e,
                              area_mm2=v["area_mm2"], paper_area_mm2=paper_a))
+    return rows
+
+
+def api_claims():
+    """Headline-claims report through the public repro.api surface: ONE
+    compiled plan per dataset, priced on every PIM target, ratios next to
+    the paper's abstract numbers (the PR-5 acceptance row)."""
+    from repro.api import reports as A
+    rows = []
+    for ds in ("imagenet", "svhn"):
+        rows += A.paper_claims(dataset=ds)
     return rows
 
 

@@ -19,9 +19,10 @@ def _run(name, fn, *args, **kw):
 
 def main() -> None:
     sys.path.insert(0, os.path.dirname(__file__))
-    from paper_tables import (fig8_storage, fig9_energy, fig10_performance,
-                              intermittency_study, kernel_bench,
-                              table1_accuracy, table2_energy_area)
+    from paper_tables import (api_claims, fig8_storage, fig9_energy,
+                              fig10_performance, intermittency_study,
+                              kernel_bench, table1_accuracy,
+                              table2_energy_area)
 
     def serve_fused(fast=False):
         # deferred so a bench_serve import failure stays one failing row
@@ -42,6 +43,7 @@ def main() -> None:
         ("fig9_energy", fig9_energy, {}),
         ("fig10_performance", fig10_performance, {}),
         ("table2_energy_area", table2_energy_area, {}),
+        ("api_claims", api_claims, {}),
         ("intermittency", intermittency_study, {}),
         ("kernels", kernel_bench, {}),
         ("conv_implicit", conv_implicit, dict(fast=fast)),

@@ -1,7 +1,8 @@
 """Quickstart: train a small LM with the paper's AND-Accumulation quantized
-projections (W1A8) on synthetic data, CPU-runnable in ~a minute, then
-compile the trained checkpoint into a serve ModelPlan (weights
-pre-quantized once, engines pinned) and decode a few tokens with it.
+projections (W1A8) on synthetic data, CPU-runnable in ~a minute, then take
+the trained checkpoint through the public facade — ``repro.api.build``,
+``.compile()`` (weights pre-quantized once, engines pinned), ``.serve()``
+— and decode a few tokens with it.
 
   PYTHONPATH=src python examples/quickstart.py [--steps 60] [--quant]
 """
@@ -49,22 +50,25 @@ def main():
 
 
 def serve_with_plan(params, cfg):
-    """Compile-once serving (the plan API): quantize projections + resolve
-    engines ONCE via ``compile_lm``, then decode with the plan active."""
-    from repro.core.plan import compile_lm
-    from repro.launch.serve import make_generate, make_prefill, serve_once
-    from repro.models import transformer as T  # noqa: F401 (arch sanity)
+    """Compile-once serving through the public facade (repro.api):
+    build -> compile (projections quantized + engines resolved ONCE) ->
+    serve (request-level engine on the compiled plan)."""
+    import time
 
-    plan = compile_lm(params, cfg, batch_hints=(2,), prompt_len=8)
-    with plan.activate():
-        prompts = jnp.asarray(
-            lm_batch(0, 0, batch=2, seq=8, vocab=cfg.vocab)["tokens"])
-        prefill_fn = make_prefill(plan.params, cfg, SINGLE, "serve")
-        generate_fn = make_generate(plan.params, cfg, SINGLE, "serve", 8, 8)
-        gen, dt = serve_once(plan.params, cfg, SINGLE, prompts, 8, "serve",
-                             prefill_fn, generate_fn)
+    import numpy as np
+
+    from repro import api
+
+    compiled = api.build(cfg, params=params).compile(batch_hints=(2,),
+                                                     prompt_len=8)
+    engine = compiled.serve(max_batch=2, new_tokens=8)
+    prompts = [np.asarray(p) for p in
+               lm_batch(0, 0, batch=2, seq=8, vocab=cfg.vocab)["tokens"]]
+    t0 = time.perf_counter()
+    gen = engine.predict(prompts)
+    dt = time.perf_counter() - t0
     print(f"plan-served 2x8 tokens in {dt:.2f}s "
-          f"(fingerprint {plan.fingerprint()}): {list(map(int, gen[0]))}")
+          f"(fingerprint {compiled.fingerprint()}): {list(map(int, gen[0]))}")
 
 
 if __name__ == "__main__":

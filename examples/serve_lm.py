@@ -1,6 +1,7 @@
-"""Batched serving example on the plan API: compile a ModelPlan once
-(projection weights pre-quantized, engine verdicts pinned), optionally
-persist it, then prefill + greedy decode with the KV cache.
+"""Batched serving example on the public facade (``repro.api``): build a
+session, compile a ModelPlan once (projection weights pre-quantized,
+engine verdicts pinned), optionally persist it, then serve batched greedy
+decodes through the request-level engine.
 
   PYTHONPATH=src python examples/serve_lm.py --new-tokens 16 \
       [--quant w1a8] [--plan-cache /tmp/lmplan]
@@ -9,11 +10,13 @@ With ``--plan-cache``, a second run reloads the plan from disk and skips
 requantization + engine resolution — the restarted-node fast path.
 """
 import argparse
+import dataclasses
 import sys
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
+from repro import api
 from repro.configs import SINGLE, get_config
 from repro.core.quant import PAPER_CONFIGS
 from repro.data.synthetic import lm_batch
@@ -31,60 +34,34 @@ def main():
                     help="persist/reload the compiled ModelPlan")
     args = ap.parse_args()
 
-    import dataclasses
-
     cfg = dataclasses.replace(get_config(args.arch).smoke(),
                               quant=PAPER_CONFIGS[args.quant])
-    qmode = "serve" if args.quant != "w32a32" else "train"
     key = jax.random.PRNGKey(0)
     params, _ = T.init_lm(key, cfg, SINGLE)
 
-    # ---- compile (or reload) the execution plan ----
-    from repro.core.plan import (check_plan_matches, compile_lm, load_plan,
-                                 plan_exists, save_plan)
-
-    if args.plan_cache and plan_exists(args.plan_cache):
-        plan = check_plan_matches(load_plan(args.plan_cache),
-                                  quant=cfg.quant, model=cfg.name)
+    # ---- session: build -> compile (or reload) the execution plan ----
+    compiled = api.build(cfg, params=params).compile(
+        batch_hints=(args.batch,), prompt_len=args.prompt_len,
+        cache=args.plan_cache)
+    if compiled.reloaded:
         print(f"plan: reloaded {args.plan_cache} "
-              f"(fingerprint {plan.fingerprint()}) — no requantization")
-    else:
-        plan = compile_lm(params, cfg, batch_hints=(args.batch,),
-                          prompt_len=args.prompt_len)
-        if args.plan_cache:
-            json_path = save_plan(plan, args.plan_cache)
-            print(f"plan: compiled and saved -> {json_path}")
-    params = plan.params
-    plan.install()  # dense GEMM dispatch becomes a plan-table lookup
+              f"(fingerprint {compiled.fingerprint()}) — no requantization")
+    elif compiled.cache_path:
+        print(f"plan: compiled and saved -> {compiled.cache_path}")
+    compiled.plan.install()  # dense GEMM dispatch becomes a plan-table lookup
 
+    # ---- serve: request-level engine over the compiled plan ----
     B, S_p, S_d = args.batch, args.prompt_len, args.new_tokens
-    prompts = jnp.asarray(
-        lm_batch(0, 0, batch=B, seq=S_p, vocab=cfg.vocab)["tokens"])
-
-    # ---- prefill ----
-    from repro.launch.serve import greedy_token, widen_cache
-
-    logits, cache = T.prefill(params, cfg, SINGLE, tokens=prompts,
-                              qmode=qmode)
-    # widen the prefill cache to the decode horizon (structural: only the
-    # attention k/v/pos entries grow — see launch/serve.widen_cache)
-    cache = widen_cache(cache, S_p, S_p + S_d)
-
-    tok = greedy_token(logits, cfg.vocab)
-    step = jax.jit(lambda c, t, p: T.decode_step(params, c, t, p, cfg,
-                                                 SINGLE, qmode=qmode))
-
-    out = [tok]
-    for t in range(S_d - 1):
-        lg, cache = step(cache, tok, S_p + t)
-        tok = greedy_token(lg, cfg.vocab)
-        out.append(tok)
-    gen = jnp.concatenate(out, axis=1)
+    prompts = [np.asarray(p) for p in
+               lm_batch(0, 0, batch=B, seq=S_p, vocab=cfg.vocab)["tokens"]]
+    engine = compiled.serve(max_batch=B, new_tokens=S_d)
+    gen = engine.predict(prompts)
     for b in range(B):
         print(f"prompt[{b}]: {list(map(int, prompts[b][-8:]))} ... "
               f"generated: {list(map(int, gen[b]))}")
-    assert gen.shape == (B, S_d)
-    print("serve OK")
+    assert all(g.shape == (S_d,) for g in gen)
+    print(f"serve OK ({engine.stats['dispatches']} dispatch(es), "
+          f"{engine.stats['requests']} requests)")
     return 0
 
 

@@ -55,11 +55,17 @@ def main():
     x, y = svhn_like(512, seed=99)
     logits = cnn_forward(tr.params, jnp.asarray(x), spec, quant, "train")
     acc = float(jnp.mean(jnp.argmax(logits, -1) == jnp.asarray(y)))
-    # serve-mode (integer AND-Accumulation engine) consistency check
-    logits_s = cnn_forward(tr.params, jnp.asarray(x[:64]), spec, quant, "serve")
+    # serve-mode (integer AND-Accumulation engine) consistency check via the
+    # public facade: compile the checkpoint into a plan and execute it
+    from repro import api
+
+    compiled = api.build(spec, quant, params=tr.params,
+                         img_hw=x.shape[1]).compile()
+    logits_s = compiled.forward(jnp.asarray(x[:64]))
     acc_s = float(jnp.mean(jnp.argmax(logits_s, -1) == jnp.asarray(y[:64])))
     print(f"{args.config}: test acc={acc:.3f} (error {100*(1-acc):.1f}%), "
-          f"integer-engine acc={acc_s:.3f}")
+          f"integer-engine acc={acc_s:.3f} "
+          f"(plan {compiled.fingerprint()})")
     return 0
 
 

@@ -1,0 +1,30 @@
+"""The public API surface: hardware targets + the Session facade.
+
+Everything the system does — compile, serve, simulate — is parameterized
+by a :class:`HardwareTarget` (DESIGN.md §9).  The facade is three calls:
+
+    from repro import api
+    model    = api.build(spec, quant, params=params)     # Session
+    compiled = model.compile(target="cpu")               # ModelPlan under the hood
+    engine   = compiled.serve(max_batch=8)               # Deployment handle
+    report   = compiled.simulate(target="sot_mram")      # CostReport
+
+``compiled.save(path)`` / ``api.load(path)`` persist the plan (the
+intermittency-resume fast path).  The paper-table reproductions live in
+:mod:`repro.api.reports` (``simulate``, ``table2``, ``fig9_fig10``) —
+``repro.pim.accelsim`` is a one-release deprecation shim over them.
+"""
+from .targets import (Cost, ComputeTarget, HardwareTarget, LayerGeometry,
+                      PIMTarget, available_targets, get_target,
+                      register_target, target_for_backend)
+from .session import (CompiledModel, CostReport, Deployment, Model, build,
+                      load)
+from . import reports
+
+__all__ = [
+    "Cost", "ComputeTarget", "HardwareTarget", "LayerGeometry", "PIMTarget",
+    "available_targets", "get_target", "register_target",
+    "target_for_backend",
+    "CompiledModel", "CostReport", "Deployment", "Model", "build", "load",
+    "reports",
+]

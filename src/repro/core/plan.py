@@ -93,6 +93,10 @@ class LayerPlan:
     engines: tuple          # ((batch_hint, engine), ...)
     pool: bool = False
     fc: bool = False
+    # per-image (energy_pj, cycles, bytes_moved) estimate from the compile
+    # target's cost model (repro.api.targets) — annotation only, never
+    # consulted by execution
+    cost: tuple = ()
 
     def engine_at(self, batch: int) -> str:
         """Verdict for ``batch``: exact hint, else the largest hint not
@@ -245,8 +249,28 @@ def _plan_cnn_layers(spec, quant: QuantConfig, *, batches, img_hw, backend,
             pool=s.pool, fc=s.fc))
         in_h, in_w = out_h, out_w
         if s.pool:
-            in_h, in_w = in_h // 2, in_w // 2
+            # floor at 1: a pooled 1x1 map (LeNet's pooled-FC stage, which
+            # exists only as a mapper/cost model) must not collapse the
+            # downstream walk to zero extent (matches pim/mapper.layer_work)
+            in_h, in_w = max(in_h // 2, 1), max(in_w // 2, 1)
     return tuple(layers)
+
+
+def _annotate_costs(layers: tuple, backend: str) -> tuple:
+    """Attach the compile target's per-layer (energy_pj, cycles,
+    bytes_moved) roofline estimate (repro.api.targets) to each LayerPlan.
+    Pure and deterministic — part of the plan's fingerprint."""
+    from repro.api.targets import LayerGeometry, target_for_backend
+    from repro.pim.mapper import effective_bits
+
+    t = target_for_backend(backend)
+    out = []
+    for lp in layers:
+        ab, wb = effective_bits(lp)
+        c = t.cost(LayerGeometry(lp.out_h * lp.out_w, lp.k, lp.cout), ab, wb)
+        out.append(dataclasses.replace(
+            lp, cost=(c.energy_pj, c.cycles, c.bytes_moved)))
+    return tuple(out)
 
 
 def _is_prequantized(params) -> bool:
@@ -267,9 +291,10 @@ def compile_model(params, spec, quant: QuantConfig, *, backend=None,
     if isinstance(img_hw, int):
         img_hw = (img_hw, img_hw)
     batch_hints = tuple(int(b) for b in batch_hints) or (1,)
-    layers = _plan_cnn_layers(tuple(spec), quant, batches=batch_hints,
-                              img_hw=tuple(img_hw), backend=backend,
-                              strict=True, autotune=autotune)
+    layers = _annotate_costs(
+        _plan_cnn_layers(tuple(spec), quant, batches=batch_hints,
+                         img_hw=tuple(img_hw), backend=backend,
+                         strict=True, autotune=autotune), backend)
     serve_params = None
     if params is not None:
         serve_params = (params if _is_prequantized(params)
@@ -399,6 +424,9 @@ def compile_lm(params, cfg, *, backend=None, batch_hints=(1,),
 
     layers, table = [], {}
     if quantized:
+        from repro.api.targets import LayerGeometry, target_for_backend
+
+        cost_target = target_for_backend(backend)
         shapes: dict[tuple, str] = {}
         for kind, tree in sorted(params["blocks"].items()):
             for sub, sv in sorted(tree.items()):
@@ -422,13 +450,16 @@ def compile_lm(params, cfg, *, backend=None, batch_hints=(1,),
                 eng = "int8"
             table[ops.dense_plan_key(K, N, quant.a_bits, quant.w_bits,
                                      backend)] = eng
+            c = cost_target.cost(LayerGeometry(m, K, N), quant.a_bits,
+                                 quant.w_bits)
             layers.append(LayerPlan(
                 index=i, name=name, op="dense", role="mid", fp=False,
                 kh=0, kw=0, stride=1, padding="", cin=K, cout=N,
                 in_h=0, in_w=0, out_h=0, out_w=0, k=K,
                 a_bits=quant.a_bits, w_bits=quant.w_bits, engine=eng,
                 engine_source=source,
-                engines=tuple((b, eng) for b in batch_hints)))
+                engines=tuple((b, eng) for b in batch_hints),
+                cost=(c.energy_pj, c.cycles, c.bytes_moved)))
     tuned = {}
     if autotune:  # heuristic plans carry no measurements (determinism)
         tuned = {k: v for k, v in ops._AUTOTUNE_CACHE.items()
@@ -447,12 +478,14 @@ def compile_lm(params, cfg, *, backend=None, batch_hints=(1,),
 def _layer_to_json(lp: LayerPlan) -> dict:
     d = dataclasses.asdict(lp)
     d["engines"] = [list(e) for e in lp.engines]
+    d["cost"] = list(lp.cost)
     return d
 
 
 def _layer_from_json(d: dict) -> LayerPlan:
     d = dict(d)
     d["engines"] = tuple((int(b), str(e)) for b, e in d["engines"])
+    d["cost"] = tuple(float(c) for c in d.get("cost", ()))
     return LayerPlan(**d)
 
 

@@ -14,8 +14,10 @@ a PLAN-CONSTRUCTION step, not a call-time decision: ``compile_model`` /
 ``compile_lm`` invoke ``prequantize_cnn_params`` (CNN) or
 :func:`repro.models.layers.prequantize_params` (transformer) exactly once
 per plan, and the resulting levels serialize with the plan (npz) so a
-restarted node never requantizes.  The deprecated
-``repro.models.cnn.prepare_serve_params`` shim still reaches it directly.
+restarted node never requantizes.  (The PR-4
+``models/cnn.prepare_serve_params`` deprecation shim over this module was
+removed in PR 5 — compile a plan, or call ``prequantize_cnn_params``
+directly in tests.)
 """
 from __future__ import annotations
 

@@ -86,27 +86,10 @@ class ConvShape:
         return (self.h + pt + pb) * (self.w + pl + pr) * cin
 
 
-# implicit engine eligibility: the kernel supports these strides, and only
-# K-axes at least this deep amortize the halo'd-tile bookkeeping (a 1x1
-# conv has no patch blowup — im2col is the identity there)
-IMPLICIT_STRIDES = (1, 2)
-IMPLICIT_KDIM_MIN = 512
-# the Pallas kernel keeps one image's int8 levels resident in VMEM per
-# batch index; leave half of the ~16 MiB VMEM for weight/output tiles and
-# the pipeline's double buffers
-IMPLICIT_VMEM_BYTES = 8 << 20
-# CPU crossover (measured, benchmarks/bench_conv.py, batch 1-8): the
-# implicit direct conv pays off once the whole BATCHED problem moves
-# enough amplified patch elements per Cin*Cout pair — conv.m (= B*oh*ow)
-# times the per-image amplification.  The per-dispatch conv-loop overhead
-# amortizes over the batch (measured: deep-cin layers flip to implicit by
-# B=2-4 well below the single-image threshold), so the threshold divides
-# by the batch (floored at B=8 — beyond that the loop cost is fully
-# amortized and only the per-element term is left).  Shallow-K convs
-# (e.g. cin=3 stem layers) lose at every batch size: each (dy, dx) tap
-# does too little dot work to cover its slice/reshape, hence the K floor.
-IMPLICIT_CPU_M_AMP_MIN = 2500
-IMPLICIT_CPU_KDIM_MIN = 128
+# The implicit-engine eligibility bounds and CPU/TPU crossover constants
+# (measured, benchmarks/bench_conv.py) moved to the HardwareTarget cost
+# tables in repro.api.targets — each ComputeTarget owns the constants its
+# select_engine consults; cost_model_engine below delegates there.
 
 
 # ---------------------------------------------------------------------------
@@ -223,47 +206,17 @@ def cost_model_engine(m: int, k: int, n: int, a_bits: int, w_bits: int,
     (``conv.m``), the CPU crossover scales with it, and the TPU kernel's
     VMEM-residency feasibility stays per-image (the grid revisits VMEM once
     per batch index).
-    """
-    backend = backend or jax.default_backend()
-    if conv is not None:
-        m = conv.m  # engine bounds always see the full batched rows
-    impl_ok = (conv is not None and conv.kh * conv.kw > 1
-               and conv.stride in IMPLICIT_STRIDES
-               and conv.padding in ("SAME", "VALID")
-               # no blowup, nothing to save: full-window FC-as-conv layers
-               # (oh=ow=1, amplification 1) stay on the dense fused GEMM
-               and conv.read_amplification >= 4.0)
-    if backend == "tpu":
-        # feasibility: one image's activation LEVELS must stay VMEM-resident
-        # — int8 up to 7 activation bits, int32 at 8 (level_dtype), so the
-        # budget is in bytes, not elements
-        from repro.core.prequant import level_dtype
 
-        cin = k // max(conv.kh * conv.kw, 1) if conv is not None else 0
-        lvl_bytes = jnp.zeros((), level_dtype(a_bits)).dtype.itemsize
-        if (impl_ok and k >= IMPLICIT_KDIM_MIN
-                and conv.padded_image_elems(cin) * lvl_bytes
-                <= IMPLICIT_VMEM_BYTES):
-            return "implicit"
-        # binary, huge-K, output tile small enough that the 128x128 MXU
-        # would idle: the 32x K-compressed VPU popcount path wins
-        if a_bits == 1 and w_bits == 1 and m * n <= (1 << 14) and k >= (1 << 15):
-            return "faithful"
-        return "fused"
-    # CPU/GPU: XLA lowers integer matmuls to scalar loops; the float unit is
-    # both faster and exact under the fp32-mantissa bound.  The implicit
-    # direct conv wins (measured, benchmarks/bench_conv.py, batch 1-8) once
-    # the batched problem moves enough amplified traffic to pay back the
-    # conv-loop overhead: conv.m * amplification ~ the patch elements saved
-    # per Cin*Cout pair.  Tiny-spatial layers (alexnet's 7x7 tail) stay on
-    # the patch GEMM, and K beyond the off-TPU realization's exactness
-    # bound falls back to the int8 engine (conv_implicit_xla would raise).
-    if (impl_ok and k >= IMPLICIT_CPU_KDIM_MIN
-            and m * conv.read_amplification
-            >= IMPLICIT_CPU_M_AMP_MIN / min(conv.batch, 8)
-            and implicit_xla_exact(k, a_bits, w_bits)):
-        return "implicit"
-    return "f32dot" if f32dot_exact(k, a_bits, w_bits) else "int8"
+    Since the HardwareTarget registry (repro.api.targets) the decision
+    procedure and its crossover constants live on the backend's
+    :class:`~repro.api.targets.ComputeTarget` — this function is the
+    dispatch-side entry that resolves the backend string to its target.
+    """
+    from repro.api.targets import target_for_backend
+
+    backend = backend or jax.default_backend()
+    return target_for_backend(backend).select_engine(m, k, n, a_bits, w_bits,
+                                                     conv)
 
 
 # ---------------------------------------------------------------------------
@@ -289,6 +242,8 @@ def engine_feasible(engine: str, m: int, k: int, n: int, a_bits: int,
     magnitude slow), so they are rejected here even though the permissive
     call-time path still accepts them for correctness testing.
     """
+    from repro.api.targets import IMPLICIT_PADDINGS, IMPLICIT_STRIDES, get_target
+
     backend = backend or jax.default_backend()
     if engine == "implicit":
         if conv is None:
@@ -297,17 +252,18 @@ def engine_feasible(engine: str, m: int, k: int, n: int, a_bits: int,
             return False, "1x1 conv has no patch amplification (im2col is the identity)"
         if conv.stride not in IMPLICIT_STRIDES:
             return False, f"stride {conv.stride} unsupported (kernel sweep handles {IMPLICIT_STRIDES})"
-        if conv.padding not in ("SAME", "VALID"):
+        if conv.padding not in IMPLICIT_PADDINGS:
             return False, f"padding {conv.padding!r} unsupported"
         if backend == "tpu":
             from repro.core.prequant import level_dtype
 
+            vmem_bytes = get_target("tpu")["implicit_vmem_bytes"]
             cin = k // max(conv.kh * conv.kw, 1)
             lvl_bytes = jnp.zeros((), level_dtype(a_bits)).dtype.itemsize
-            if conv.padded_image_elems(cin) * lvl_bytes > IMPLICIT_VMEM_BYTES:
+            if conv.padded_image_elems(cin) * lvl_bytes > vmem_bytes:
                 return False, (
                     f"image levels ({conv.padded_image_elems(cin) * lvl_bytes}"
-                    f" B) exceed the {IMPLICIT_VMEM_BYTES} B VMEM residency"
+                    f" B) exceed the {vmem_bytes} B VMEM residency"
                     " budget")
             return True, ""
         if not implicit_xla_exact(k, a_bits, w_bits):

@@ -225,27 +225,23 @@ def main():
     params, _ = T.init_lm(jax.random.PRNGKey(0), cfg, SINGLE)
     model_plan = None
     if args.plan_cache and qmode == "serve":
-        from repro.core.plan import (check_plan_matches, compile_lm,
-                                     load_plan, plan_exists, save_plan)
+        # the Session facade (repro.api): compile-or-reload the ModelPlan.
+        # A cached plan compiled under a different quant/arch is refused
+        # (wrong bit widths would silently decode the stored integer
+        # levels into garbage rather than erroring on shapes).
+        from repro import api
 
-        base = args.plan_cache
-        t0 = time.perf_counter()
-        if plan_exists(base):
-            # refuse a plan compiled under a different quant/arch: wrong
-            # bit widths would silently decode the stored integer levels
-            # into garbage rather than erroring on shapes
-            model_plan = check_plan_matches(load_plan(base), quant=cfg.quant,
-                                            model=cfg.name)
-            print(f"plan: reloaded {base} in "
-                  f"{(time.perf_counter() - t0) * 1e3:.1f}ms (requantization "
+        compiled = api.build(cfg, params=params).compile(
+            batch_hints=(args.batch,), prompt_len=args.prompt_len,
+            autotune=args.autotune, cache=args.plan_cache)
+        model_plan = compiled.plan
+        if compiled.reloaded:
+            print(f"plan: reloaded {args.plan_cache} in "
+                  f"{compiled.compile_s * 1e3:.1f}ms (requantization "
                   f"+ autotune skipped)")
         else:
-            model_plan = compile_lm(params, cfg, batch_hints=(args.batch,),
-                                    prompt_len=args.prompt_len,
-                                    autotune=args.autotune)
-            json_path = save_plan(model_plan, base)
             print(f"plan: compiled{' +autotune' if args.autotune else ''} in "
-                  f"{(time.perf_counter() - t0) * 1e3:.1f}ms -> {json_path}")
+                  f"{compiled.compile_s * 1e3:.1f}ms -> {compiled.cache_path}")
         params = model_plan.params
         model_plan.install()  # dense GEMM dispatch becomes a table lookup
     elif args.prequant and qmode == "serve":

@@ -11,15 +11,15 @@ per-layer engine choices, weight pre-quantization, and feasibility checks
 all happen ONCE at plan-compile time, and ``cnn_forward(mode="serve")``
 just walks the LayerPlan sequence — no per-call dispatch, no
 float-vs-prequant branching in the forward.  Training mode keeps the
-fake-quant STE conv.  ``prepare_serve_params`` survives as a deprecation
-shim over :func:`repro.core.plan.compile_model`.
+fake-quant STE conv.  The ``prepare_serve_params`` deprecation shim was
+removed (PR 5): pre-quantize through :func:`repro.core.plan.compile_model`
+/ ``repro.api.build(...).compile()`` (or, for tests that only need the
+raw levels, :func:`repro.core.prequant.prequantize_cnn_params`).
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-import warnings
-from functools import partial
 from typing import Sequence
 
 import jax
@@ -88,24 +88,6 @@ def init_cnn(key, spec: Sequence[ConvSpec], dtype=jnp.float32):
         axes.append(dict(w=(None, None, None, "mlp"), b=("mlp",), g=("mlp",),
                          beta=("mlp",)))
     return params, axes
-
-
-def prepare_serve_params(params, spec: Sequence[ConvSpec], quant: QuantConfig):
-    """DEPRECATED shim (one release): quantize conv/FC weights at load.
-
-    Use :func:`repro.core.plan.compile_model` instead — it performs the
-    same pre-quantization as one step of plan construction and additionally
-    pins engines, validates overrides, and serializes to disk.  Output is
-    identical to ``compile_model(...).params``.
-    """
-    warnings.warn(
-        "prepare_serve_params is deprecated; use "
-        "repro.core.plan.compile_model(params, spec, quant).params "
-        "(removal in the next release)",
-        DeprecationWarning, stacklevel=2)
-    from repro.core.prequant import prequantize_cnn_params
-
-    return prequantize_cnn_params(params, spec, quant)
 
 
 def _norm_act(x, g, beta, quant: QuantConfig, role: str, mode: str = "train"):

@@ -1,121 +1,24 @@
-"""End-to-end accelerator simulation reproducing the paper's tables.
+"""DEPRECATED shim (one release): end-to-end accelerator simulation.
 
-Calibration protocol (DESIGN.md §2, honest-knobs policy):
-  * Cycle structure is *structural* — derived from each design's dataflow
-    (compressor vs serial counter vs ADC vs MAC array), never fitted.
-  * One energy scale per design is fitted to the ImageNet column of
-    Table II (the only absolute numbers the paper publishes).
-  * SVHN / MNIST columns and the Fig. 9/10 ratios are then *predictions*
-    of the model — the benchmarks assert them against the paper's claims.
+The Table II / Fig. 9 / Fig. 10 reproductions now live in
+:mod:`repro.api.reports`, built on the HardwareTarget registry
+(:mod:`repro.api.targets`) — ``simulate(design, dataset)`` there compiles
+a ModelPlan for the dataset's CNN and prices it on the named target
+instead of re-walking specs.  This module re-exports the old names
+bit-identically and will be removed next release; importing it emits one
+:class:`DeprecationWarning`.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Sequence
+import warnings
 
-from repro.models.cnn import ConvSpec, alexnet_spec, svhn_cnn_spec
-from .energy import DESIGNS, DeviceModel
-from .mapper import accel_cost, model_work
+warnings.warn(
+    "repro.pim.accelsim is deprecated; use repro.api (build(...).compile()"
+    ".simulate(target=...)) or repro.api.reports (simulate/table2/"
+    "fig9_fig10) — removal in the next release",
+    DeprecationWarning, stacklevel=2)
 
-# Table II (paper): energy uJ/img and area mm2 per design per dataset.
-TABLE2 = {
-    "reram":    dict(imagenet=(2275.34, 9.19), svhn=(425.21, 0.085), mnist=(13.55, 0.060)),
-    "imce":     dict(imagenet=(785.25, 2.12),  svhn=(135.26, 0.010), mnist=(0.92, 0.009)),
-    "proposed": dict(imagenet=(471.8, 2.60),   svhn=(84.31, 0.039),  mnist=(0.68, 0.012)),
-}
-
-# Headline claims (abstract / §III-C,D).
-CLAIMS = dict(
-    imce=dict(energy=2.1, speed=3.0),
-    reram=dict(energy=5.4, speed=9.0),
-    asic=dict(energy=9.7, speed=13.5),
-)
-
-AREA_MM2 = dict(proposed=2.60, imce=2.12, reram=9.19, asic=30.0)
-# ASIC area: YodaNN-like logic + 33 MB eDRAM @ ~0.1 um^2/bit (45 nm) ~= 30 mm^2.
-
-
-def lenet_spec() -> list[ConvSpec]:
-    """LeNet-5-style MNIST model for the Table II MNIST column."""
-    return [
-        ConvSpec(1, 6, 5, role="first"),
-        ConvSpec(6, 16, 5, pool=True),
-        ConvSpec(16, 120, 5, pool=True, fc=True),
-        ConvSpec(120, 84, 1, fc=True),
-        ConvSpec(84, 10, 1, fc=True, role="last"),
-    ]
-
-
-# Table II's SVHN BCNN is larger than the Table I accuracy model (the paper
-# reuses the BCNN of [8] for the energy rows); width chosen structurally so
-# the MAC count sits between MNIST and ImageNet like the paper's.
-TABLE2_SVHN_CHANNELS = 72
-
-DATASETS = {
-    "imagenet": dict(spec=alexnet_spec, img=224),
-    "svhn": dict(spec=lambda: svhn_cnn_spec(TABLE2_SVHN_CHANNELS), img=40),
-    "mnist": dict(spec=lenet_spec, img=28),
-}
-
-# Energy scale per design, fitted ONCE to the ImageNet column (see
-# calibrate() below; values reproduced here so the sim is deterministic).
-ENERGY_SCALE = dict(proposed=0.6602, imce=0.5586, reram=0.3662, asic=0.661)
-
-
-def simulate(design: str, dataset: str, m_bits: int = 1, n_bits: int = 1) -> dict:
-    d = DESIGNS[design]
-    ds = DATASETS[dataset]
-    works = model_work(ds["spec"](), ds["img"], m_bits, n_bits)
-    r = accel_cost(d, works)
-    r["energy_uj"] *= ENERGY_SCALE[design]
-    r["area_mm2"] = AREA_MM2[design]
-    r["fps_per_mm2"] = r["fps"] / r["area_mm2"]
-    r["gops_per_w"] = (r["macs"] * 2e-9) / (r["energy_uj"] * 1e-6)
-    r["eff_per_mm2"] = r["gops_per_w"] / r["area_mm2"]
-    return r
-
-
-def table2(m_bits: int = 1, n_bits: int = 1) -> dict:
-    """Reproduce Table II: energy/area per design per dataset (BCNN 1:1)."""
-    out = {}
-    for design in ("reram", "imce", "proposed"):
-        out[design] = {
-            ds: dict(energy_uj=simulate(design, ds, m_bits, n_bits)["energy_uj"],
-                     area_mm2=AREA_MM2[design])
-            for ds in DATASETS
-        }
-    return out
-
-
-def fig9_fig10(configs=((1, 1), (1, 4), (1, 8), (2, 2))) -> dict:
-    """Area-normalized energy-efficiency (Fig. 9) and fps (Fig. 10) across
-    W:I configs, averaged over datasets, ratios vs the proposed design."""
-    effs: dict[str, list] = {k: [] for k in DESIGNS}
-    fpss: dict[str, list] = {k: [] for k in DESIGNS}
-    for (n_b, m_b) in configs:  # (W, I)
-        for ds in DATASETS:
-            for design in DESIGNS:
-                r = simulate(design, ds, m_b, n_b)
-                effs[design].append(r["eff_per_mm2"])
-                fpss[design].append(r["fps_per_mm2"])
-    gmean = lambda xs: float(__import__("numpy").exp(
-        __import__("numpy").mean(__import__("numpy").log(xs))))
-    eff = {k: gmean(v) for k, v in effs.items()}
-    fps = {k: gmean(v) for k, v in fpss.items()}
-    return dict(
-        eff_per_mm2=eff, fps_per_mm2=fps,
-        energy_ratio={k: eff["proposed"] / eff[k] for k in DESIGNS if k != "proposed"},
-        speed_ratio={k: fps["proposed"] / fps[k] for k in DESIGNS if k != "proposed"},
-    )
-
-
-def calibrate() -> dict[str, float]:
-    """Refit ENERGY_SCALE to the Table II ImageNet column (dev utility)."""
-    scales = {}
-    for design in ("proposed", "imce", "reram"):
-        d = DESIGNS[design]
-        works = model_work(alexnet_spec(), 224, 1, 1)
-        raw = accel_cost(d, works)["energy_uj"]
-        scales[design] = TABLE2[design]["imagenet"][0] / raw
-    scales["asic"] = ENERGY_SCALE["asic"]
-    return scales
+from repro.api.reports import (  # noqa: E402,F401 (re-exported legacy names)
+    CLAIMS, DATASETS, TABLE2, TABLE2_SVHN_CHANNELS, calibrate, fig9_fig10,
+    lenet_spec, simulate, table2)
+from repro.api.targets import AREA_MM2, ENERGY_SCALE  # noqa: E402,F401

@@ -27,7 +27,17 @@ class LayerWork:
 
 
 def layer_work(spec: ConvSpec, in_hw: int, m_bits: int, n_bits: int) -> tuple[LayerWork, int]:
-    """Returns (work, out_hw)."""
+    """Returns (work, out_hw).
+
+    Spatial bookkeeping mirrors the paper's Fig. 3 walk (and
+    ``models/cnn.count_macs``): the conv output is the ceil-div of the
+    input extent by the stride FIRST, and the 2x2 average-pool halving
+    applies to that output afterwards, floored at 1 so a pooled 1x1 map
+    (LeNet's pooled FC stage) cannot collapse downstream layers to zero
+    extent.  FC layers reduce to 1x1 regardless of input extent.
+    """
+    if in_hw < 1:
+        raise ValueError(f"layer_work: input extent must be >= 1, got {in_hw}")
     if spec.fc:
         oh = 1
     else:
@@ -35,7 +45,8 @@ def layer_work(spec: ConvSpec, in_hw: int, m_bits: int, n_bits: int) -> tuple[La
     macs = oh * oh * spec.k * spec.k * spec.cin * spec.cout
     bitp = macs * m_bits * n_bits
     return LayerWork(macs=macs, bit_products=bitp,
-                     row_ops=-(-bitp // SUBARRAY_COLS)), (oh // 2 if spec.pool else oh)
+                     row_ops=-(-bitp // SUBARRAY_COLS)), \
+        (max(oh // 2, 1) if spec.pool else oh)
 
 
 def model_work(specs: Sequence[ConvSpec], img: int, m_bits: int, n_bits: int,
@@ -52,8 +63,45 @@ def model_work(specs: Sequence[ConvSpec], img: int, m_bits: int, n_bits: int,
     return works
 
 
+def effective_bits(lp) -> tuple[int, int]:
+    """(a_bits, w_bits) a layer *executes* at: full-precision layers run
+    as 8-bit fixed point in-memory (``model_work``'s quant_first_last_fp
+    policy).  The single source for every cost/works computation — plan
+    annotations (`core/plan._annotate_costs`), works derivation below, and
+    `repro.api.session.CompiledModel.simulate` all price with this."""
+    return (8, 8) if lp.fp else (lp.a_bits, lp.w_bits)
+
+
+def works_from_layers(layers: Sequence) -> list[LayerWork]:
+    """Per-layer work from compiled ``LayerPlan`` records (duck-typed:
+    anything with ``out_h/out_w/kh/kw/cin/cout/fp/a_bits/w_bits``).
+
+    Same arithmetic as :func:`layer_work` — a plan's geometry walk and the
+    spec walk of :func:`model_work` agree for the paper's models, so the
+    two routes produce bit-identical works (pinned in ``tests/test_api``).
+    Full-precision layers execute as 8-bit fixed point in-memory, matching
+    ``model_work``'s ``quant_first_last_fp`` policy.
+    """
+    works = []
+    for lp in layers:
+        mb, nb = effective_bits(lp)
+        macs = lp.out_h * lp.out_w * lp.kh * lp.kw * lp.cin * lp.cout
+        bitp = macs * mb * nb
+        works.append(LayerWork(macs=macs, bit_products=bitp,
+                               row_ops=-(-bitp // SUBARRAY_COLS)))
+    return works
+
+
 def accel_cost(design: DeviceModel, works: Sequence[LayerWork]) -> dict:
-    """Energy (uJ) and latency (us) for one image on one design."""
+    """Energy (uJ) and latency (us) for one image on one design.
+
+    ``works`` must be non-empty: an empty list used to fall through to a
+    0-cycle, 0-energy result whose downstream ratios divide zero by zero —
+    now it is a loud error at the call site.
+    """
+    if not works:
+        raise ValueError("accel_cost: empty works — map at least one layer "
+                         "before costing a design")
     total_macs = sum(w.macs for w in works)
     total_rows = sum(w.row_ops for w in works)
     if design.e_mac_asic:  # CMOS ASIC path

@@ -200,14 +200,14 @@ def test_implicit_xla_exactness_guard():
 def test_cnn_serve_forward_engines_agree():
     """Full serve forward: auto dispatch == forced GEMM engine, float
     checkpoint == prequantized params (on-the-fly prequant path)."""
-    from repro.models.cnn import (ConvSpec, cnn_forward, init_cnn,
-                                  prepare_serve_params)
+    from repro.core.prequant import prequantize_cnn_params
+    from repro.models.cnn import ConvSpec, cnn_forward, init_cnn
 
     # tiny 3-layer net exercising implicit dispatch + the 1x1 fallback
     spec = [ConvSpec(3, 16, 3, role="first"), ConvSpec(16, 64, 3),
             ConvSpec(64, 10, 1, role="last")]
     params, _ = init_cnn(jax.random.PRNGKey(0), spec)
-    sp = prepare_serve_params(params, spec, W1A4)
+    sp = prequantize_cnn_params(params, spec, W1A4)
     x = jax.random.uniform(jax.random.PRNGKey(1), (2, 16, 16, 3))
     auto = np.asarray(cnn_forward(sp, x, spec, W1A4, "serve"))
     forced = np.asarray(cnn_forward(

@@ -22,8 +22,8 @@ from repro.core.quant import PAPER_CONFIGS, W1A4
 from repro.launch.engine import (BucketBatcher, CNNRunner, LMRunner, QueueFull,
                                  Request, ServeEngine, run_offered_load)
 from repro.models import transformer as T
-from repro.models.cnn import (cnn_forward, init_cnn, prepare_serve_params,
-                              svhn_cnn_spec)
+from repro.core.prequant import prequantize_cnn_params
+from repro.models.cnn import cnn_forward, init_cnn, svhn_cnn_spec
 
 
 # ---------------------------------------------------------------------------
@@ -75,7 +75,7 @@ def test_batcher_take_all_drains_partials():
 
 SPEC = svhn_cnn_spec(8)
 _params, _ = init_cnn(jax.random.PRNGKey(0), SPEC)
-SERVE_PARAMS = prepare_serve_params(_params, SPEC, W1A4)
+SERVE_PARAMS = prequantize_cnn_params(_params, SPEC, W1A4)
 IMGS = [np.random.RandomState(i).uniform(size=(16, 16, 3)).astype(np.float32)
         for i in range(6)]
 
@@ -338,11 +338,12 @@ from repro.core.quant import W1A4
 from repro.distributed.sharding import batch_sharding, data_parallel
 from repro.launch.engine import CNNRunner, ServeEngine
 from repro.launch.mesh import make_serve_mesh
-from repro.models.cnn import cnn_forward, init_cnn, prepare_serve_params, svhn_cnn_spec
+from repro.core.prequant import prequantize_cnn_params
+from repro.models.cnn import cnn_forward, init_cnn, svhn_cnn_spec
 
 spec = svhn_cnn_spec(8)
 params, _ = init_cnn(jax.random.PRNGKey(0), spec)
-sp = prepare_serve_params(params, spec, W1A4)
+sp = prequantize_cnn_params(params, spec, W1A4)
 imgs = [np.random.RandomState(i).uniform(size=(16, 16, 3)).astype(np.float32)
         for i in range(19)]  # ragged: 16 + 3
 mesh = make_serve_mesh()

@@ -158,17 +158,17 @@ def test_im2col_sliced_matches_float_im2col_contraction():
                                np.asarray(ref), rtol=1e-4, atol=1e-4)
 
 
-def test_prepare_serve_params_forward_identical():
-    """prepare_serve_params + serve forward == seed re-quantizing serve."""
-    from repro.models.cnn import (cnn_forward, init_cnn, prepare_serve_params,
-                                  svhn_cnn_spec)
+def test_prequantize_cnn_params_forward_identical():
+    """prequantize_cnn_params + serve forward == seed re-quantizing serve."""
+    from repro.core.prequant import prequantize_cnn_params
+    from repro.models.cnn import cnn_forward, init_cnn, svhn_cnn_spec
 
     spec = svhn_cnn_spec(8)
     params, _ = init_cnn(jax.random.PRNGKey(0), spec)
     x = jax.random.uniform(jax.random.PRNGKey(1), (2, 16, 16, 3))
     for q in (W1A4, W1A8):
         ref = np.asarray(cnn_forward(params, x, spec, q, "serve"))
-        sp = prepare_serve_params(params, spec, q)
+        sp = prequantize_cnn_params(params, spec, q)
         out = np.asarray(cnn_forward(sp, x, spec, q, "serve"))
         np.testing.assert_array_equal(out, ref)
         # first/last stay fp; quantized layers store int8 levels, no float w

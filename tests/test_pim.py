@@ -2,12 +2,14 @@
 
 Calibration fits ONE energy scale per design on the Table II ImageNet
 column; everything asserted here beyond that column is a *prediction* of
-the structural model (see accelsim.py docstring).
+the structural model (see repro/api/reports.py docstring — this suite
+runs against the HardwareTarget-backed implementation;
+``repro.pim.accelsim`` is its deprecation shim).
 """
 import numpy as np
 import pytest
 
-from repro.pim import accelsim as A
+from repro.api import reports as A
 from repro.pim.energy import DESIGNS
 from repro.pim.mapper import accel_cost, model_work
 from repro.models.cnn import alexnet_spec

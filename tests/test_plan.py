@@ -16,7 +16,6 @@ Pins four contracts:
   compiled program between two different plans.
 """
 import dataclasses
-import warnings
 
 import jax
 import jax.numpy as jnp
@@ -149,12 +148,16 @@ def test_plan_forward_bit_identical_to_auto_dispatch():
     np.testing.assert_array_equal(out, from_float)
 
 
-def test_prepare_serve_params_shim_warns_and_matches():
+def test_prepare_serve_params_shim_is_gone():
+    """The PR-4 deprecation shim was removed on schedule; compile_model's
+    params payload is the (only) prequantization path and matches the raw
+    prequantize step it wraps."""
     spec, params, _ = _small_setup()
-    from repro.models.cnn import prepare_serve_params
+    import repro.models.cnn as cnn_mod
+    from repro.core.prequant import prequantize_cnn_params
 
-    with pytest.warns(DeprecationWarning, match="compile_model"):
-        sp = prepare_serve_params(params, spec, W1A4)
+    assert not hasattr(cnn_mod, "prepare_serve_params")
+    sp = prequantize_cnn_params(params, spec, W1A4)
     plan = P.compile_model(params, spec, W1A4, img_hw=16)
     for a, b in zip(jax.tree.leaves(sp), jax.tree.leaves(plan.params)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
@@ -419,10 +422,8 @@ def test_serve_engine_program_cache_keyed_on_plan():
                         max_batch=4).serve(imgs)
     res_f = ServeEngine(CNNRunner(None, spec, None, plan=plan_f),
                         max_batch=4).serve(imgs)
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        from repro.models.cnn import prepare_serve_params
-        sp = prepare_serve_params(params, spec, W1A4)
+    from repro.core.prequant import prequantize_cnn_params
+    sp = prequantize_cnn_params(params, spec, W1A4)
     legacy = ServeEngine(CNNRunner(sp, spec, W1A4), max_batch=4).serve(imgs)
     for a, f, l in zip(res_a, res_f, legacy):
         np.testing.assert_array_equal(a.value, l.value)
