@@ -33,6 +33,10 @@ def main() -> None:
         from bench_conv import conv_rows
         return conv_rows(fast=fast)
 
+    def attn_flash(fast=False):
+        from bench_attn import attn_rows
+        return attn_rows(fast=fast)
+
     fast = "--fast" in sys.argv
     strict = "--strict" in sys.argv  # exit nonzero if any job errors (CI)
     failed = []
@@ -47,6 +51,7 @@ def main() -> None:
         ("intermittency", intermittency_study, {}),
         ("kernels", kernel_bench, {}),
         ("conv_implicit", conv_implicit, dict(fast=fast)),
+        ("attn_flash", attn_flash, dict(fast=fast)),
         ("serve_fused", serve_fused, dict(fast=fast)),
     ]
     print("name,us_per_call,derived")

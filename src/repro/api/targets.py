@@ -143,6 +143,57 @@ class ComputeTarget(HardwareTarget):
                       conv=None) -> str:
         raise NotImplementedError
 
+    def attn_cost(self, attn) -> Cost:
+        """Roofline estimate for one attention layer (plan annotation).
+
+        Scores + weighted values are two GEMMs over the *effective* kv
+        extent (a sliding window bounds it; causal halves it), per head
+        and batch row.  Same physical constants as :meth:`cost`.
+        """
+        if attn.window:
+            eff_kv = min(attn.window, attn.seq_kv)
+        elif attn.causal and attn.seq_q == attn.seq_kv:
+            eff_kv = max(attn.seq_kv // 2, 1)
+        else:
+            eff_kv = attn.seq_kv
+        geom = LayerGeometry(m=attn.batch * attn.heads * attn.seq_q,
+                             k=attn.head_dim, n=eff_kv)
+        qk = self.cost(geom, 8, 8)
+        return qk + qk  # P @ V moves/computes the mirror of Q @ K^T
+
+    def select_attn_engine(self, attn) -> str:
+        """Pick the attention engine for one prefill/train geometry.
+
+        Shared decision procedure over per-target table constants
+        (``attn_*``); ``attn`` is a :class:`repro.kernels.ops.AttnShape`.
+        Engines, all realized in ``models/layers.py`` /
+        ``kernels/attn_flash.py``:
+
+          ``full``     materialized S^2 logits + one softmax — fastest
+                       while the logits fit cache/HBM;
+          ``chunked``  online-softmax scan (O(S) memory), masked kv chunks
+                       skipped;
+          ``banded``   block-diagonal sliding-window evaluation — only
+                       defined when a window bounds the band;
+          ``flash``    the quantized flash kernel — only when the serve
+                       path is quantized (it consumes level-quantized q/k,
+                       so it would change train/full-precision numerics).
+        """
+        from repro.kernels.attn_flash import flash_levels_exact
+
+        t = dict(self.table)
+        seq = max(attn.seq_q, attn.seq_kv)
+        if (attn.quantized and seq >= t["attn_flash_seq_min"]
+                and attn.seq_q > 1
+                and flash_levels_exact(attn.head_dim, 8, 8)):
+            return "flash"
+        if (attn.window and attn.banded_ok
+                and attn.seq_q > 2 * attn.window):
+            return "banded"
+        if seq >= t["attn_chunk_seq_min"]:
+            return "chunked"
+        return "full"
+
 
 @dataclasses.dataclass(frozen=True)
 class CpuTarget(ComputeTarget):
@@ -162,6 +213,18 @@ class CpuTarget(ComputeTarget):
         # shallow-K convs (cin=3 stems) lose at every batch size: each
         # (dy, dx) tap does too little dot work to cover its slice/reshape
         ("implicit_kdim_min", 128),
+        # channel-EXPANDING convs (cout > cin) write cout/cin times the
+        # patch bytes they save; measured (bench_conv.json) the direct
+        # sweep only recovers that above cin=96 (svhn 64->128 runs at
+        # 0.63x gemm, crossover 32->64 at 0.77x; 96->256 and all
+        # non-expanding deep layers still win)
+        ("implicit_expand_cin_min", 96),
+        # online-softmax chunking beats materialized S^2 logits once the
+        # sequence spills cache (the former CHUNK_ATTN_THRESHOLD)
+        ("attn_chunk_seq_min", 8192),
+        # the quantized flash kernel's block sweep needs enough kv blocks
+        # to amortize its online-softmax state updates
+        ("attn_flash_seq_min", 4096),
     )
 
     def select_engine(self, m, k, n, a_bits, w_bits, conv=None) -> str:
@@ -175,6 +238,9 @@ class CpuTarget(ComputeTarget):
                 and m * conv.read_amplification
                 >= t["implicit_m_amp_min"]
                 / min(conv.batch, t["implicit_batch_amortize_cap"])
+                and (n <= k // max(conv.kh * conv.kw, 1)  # cout <= cin
+                     or k // max(conv.kh * conv.kw, 1)
+                     >= t["implicit_expand_cin_min"])
                 and implicit_xla_exact(k, a_bits, w_bits)):
             return "implicit"
         return "f32dot" if f32dot_exact(k, a_bits, w_bits) else "int8"
@@ -203,6 +269,10 @@ class TpuTarget(ComputeTarget):
         # would idle: the 32x K-compressed VPU popcount path wins
         ("faithful_mn_max", 1 << 14),
         ("faithful_kdim_min", 1 << 15),
+        # attention: same decision procedure as CPU; the native Pallas
+        # flash kernel amortizes earlier (MXU int8 dots from block one)
+        ("attn_chunk_seq_min", 8192),
+        ("attn_flash_seq_min", 2048),
     )
 
     def select_engine(self, m, k, n, a_bits, w_bits, conv=None) -> str:

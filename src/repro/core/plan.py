@@ -97,6 +97,9 @@ class LayerPlan:
     # target's cost model (repro.api.targets) — annotation only, never
     # consulted by execution
     cost: tuple = ()
+    # attention layers (op == "attn") carry their resolved realization
+    # (full/chunked/banded/flash) here; "" for conv/dense rows
+    attn_engine: str = ""
 
     def engine_at(self, batch: int) -> str:
         """Verdict for ``batch``: exact hint, else the largest hint not
@@ -122,6 +125,11 @@ class ModelPlan:
     params: object = None           # pre-quantized serve pytree (or None)
     dense_table: dict = dataclasses.field(default_factory=dict)
     autotune: dict = dataclasses.field(default_factory=dict)
+    # attention dispatch verdicts: attn_plan_key -> engine.  A separate
+    # table from dense_table — attention engines (full/chunked/banded/
+    # flash) name realizations of the softmax dataflow, not level-GEMM
+    # engines, so consumers of dense_table never see them.
+    attn_table: dict = dataclasses.field(default_factory=dict)
     version: int = PLAN_VERSION
 
     # -- identity -----------------------------------------------------------
@@ -135,6 +143,8 @@ class ModelPlan:
             layers=[_layer_to_json(lp) for lp in self.layers],
             dense_table=[[list(k), v] for k, v in
                          sorted(self.dense_table.items())],
+            attn_table=[[list(k), v] for k, v in
+                        sorted(self.attn_table.items())],
             autotune=[[list(k), v[0], v[1]] for k, v in
                       sorted(self.autotune.items(), key=lambda kv: kv[0])],
         )
@@ -147,27 +157,32 @@ class ModelPlan:
 
     # -- dispatch installation ---------------------------------------------
 
+    def _dispatch_table(self) -> dict:
+        """Every verdict this plan installs (dense GEMMs + attention)."""
+        return {**self.dense_table, **self.attn_table}
+
     def install(self) -> "ModelPlan":
-        """Install this plan's dense verdicts process-wide (long-lived
-        server: one plan, installed once at startup)."""
-        ops.install_plan_table(self.dense_table)
+        """Install this plan's dense + attention verdicts process-wide
+        (long-lived server: one plan, installed once at startup)."""
+        ops.install_plan_table(self._dispatch_table())
         return self
 
     @contextlib.contextmanager
     def activate(self):
-        """Scoped install: dense dispatch consults this plan's table while
-        the context is open (covers jit *trace* time — traced programs keep
-        the planned engines forever after).  Exit restores the PRIOR state
-        of every key this plan touched, so activating on top of a
-        process-wide :meth:`install` (or a nested activation) never
-        uninstalls the outer plan's verdicts."""
-        prior = {k: ops._PLAN_TABLE[k] for k in self.dense_table
+        """Scoped install: dense and attention dispatch consult this plan's
+        tables while the context is open (covers jit *trace* time — traced
+        programs keep the planned engines forever after).  Exit restores
+        the PRIOR state of every key this plan touched, so activating on
+        top of a process-wide :meth:`install` (or a nested activation)
+        never uninstalls the outer plan's verdicts."""
+        table = self._dispatch_table()
+        prior = {k: ops._PLAN_TABLE[k] for k in table
                  if k in ops._PLAN_TABLE}
-        ops.install_plan_table(self.dense_table)
+        ops.install_plan_table(table)
         try:
             yield self
         finally:
-            ops.remove_plan_table({k: None for k in self.dense_table
+            ops.remove_plan_table({k: None for k in table
                                    if k not in prior})
             if prior:
                 ops.install_plan_table(prior)
@@ -460,6 +475,13 @@ def compile_lm(params, cfg, *, backend=None, batch_hints=(1,),
                 engine_source=source,
                 engines=tuple((b, eng) for b in batch_hints),
                 cost=(c.energy_pj, c.cycles, c.bytes_moved)))
+    # attention realization: one verdict per distinct window geometry
+    # (global-attention kinds share one; attn_local brings the window).
+    # Resolved on the PURE target decision procedure, mirroring the dense
+    # heuristic path — a compiling plan must not absorb another installed
+    # plan's verdicts.
+    attn_table = _plan_lm_attention(params, cfg, quant, backend,
+                                    batch_hints, prompt_len, layers)
     tuned = {}
     if autotune:  # heuristic plans carry no measurements (determinism)
         tuned = {k: v for k, v in ops._AUTOTUNE_CACHE.items()
@@ -468,7 +490,53 @@ def compile_lm(params, cfg, *, backend=None, batch_hints=(1,),
     return ModelPlan(kind="lm", model=getattr(cfg, "name", "lm"),
                      backend=backend, quant=quant, batch_hints=batch_hints,
                      layers=tuple(layers), params=serve_params,
-                     dense_table=table, autotune=tuned)
+                     dense_table=table, attn_table=attn_table,
+                     autotune=tuned)
+
+
+def _plan_lm_attention(params, cfg, quant: QuantConfig, backend: str,
+                       batch_hints: tuple, prompt_len: int,
+                       layers: list) -> dict:
+    """Resolve and record the attention engine per window geometry.
+
+    Appends one ``op="attn"`` :class:`LayerPlan` row per verdict to
+    ``layers`` and returns the :func:`repro.kernels.ops.attn_plan_key`
+    table the plan installs for dispatch.
+    """
+    from repro.api.targets import target_for_backend
+    from repro.models.layers import attn_quantized
+
+    cost_target = target_for_backend(backend)
+    attn_table: dict = {}
+    seen: set = set()
+    for kind in sorted(params["blocks"]):
+        if kind not in ("attn", "moe", "attn_local"):
+            continue
+        window = cfg.window if kind == "attn_local" else None
+        if window in seen:
+            continue
+        seen.add(window)
+        attn = ops.AttnShape(
+            seq_q=prompt_len, seq_kv=prompt_len, heads=cfg.n_heads,
+            head_dim=cfg.hd, causal=bool(cfg.causal), window=window,
+            batch=batch_hints[0],
+            quantized=attn_quantized(quant, "serve"),
+            banded_ok=bool(getattr(cfg, "banded_attn", False)))
+        eng = cost_target.select_attn_engine(attn)
+        if (getattr(cfg, "full_attn_analysis", False)
+                and eng in ("chunked", "flash")):
+            eng = "full"  # the analysis contract pins materialized logits
+        attn_table[ops.attn_plan_key(attn, backend)] = eng
+        c = cost_target.attn_cost(attn)
+        layers.append(LayerPlan(
+            index=len(layers), name=f"attn[{kind}]", op="attn", role="mid",
+            fp=not attn.quantized, kh=0, kw=0, stride=1, padding="",
+            cin=cfg.d_model, cout=cfg.d_model, in_h=0, in_w=0,
+            out_h=0, out_w=0, k=cfg.hd, a_bits=quant.a_bits,
+            w_bits=quant.w_bits, engine=eng, engine_source="heuristic",
+            engines=tuple((b, eng) for b in batch_hints),
+            cost=(c.energy_pj, c.cycles, c.bytes_moved), attn_engine=eng))
+    return attn_table
 
 
 # ---------------------------------------------------------------------------
@@ -588,6 +656,7 @@ def load_plan(path: str) -> ModelPlan:
         with np.load(npz_path) as npz:
             params = _reconstitute(meta["params_skel"], npz)
     dense_table = {tuple(k): v for k, v in meta["dense_table"]}
+    attn_table = {tuple(k): v for k, v in meta.get("attn_table", [])}
     autotune = {tuple(k): (eng, times)
                 for k, eng, times in meta.get("autotune", [])}
     if autotune:
@@ -598,5 +667,5 @@ def load_plan(path: str) -> ModelPlan:
         quant=QuantConfig(**meta["quant"]),
         batch_hints=tuple(meta["batch_hints"]),
         layers=tuple(_layer_from_json(d) for d in meta["layers"]),
-        params=params, dense_table=dense_table, autotune=autotune,
-        version=meta["version"])
+        params=params, dense_table=dense_table, attn_table=attn_table,
+        autotune=autotune, version=meta["version"])

@@ -86,6 +86,92 @@ class ConvShape:
         return (self.h + pt + pb) * (self.w + pl + pr) * cin
 
 
+@dataclasses.dataclass(frozen=True)
+class AttnShape:
+    """Static attention geometry for engine selection.
+
+    The attention analogue of :class:`ConvShape`: everything the dispatch
+    decision needs, nothing data-dependent.  ``quantized`` marks a serve
+    path whose projections already run on integer levels — only then may
+    the (approximating) quantized flash kernel be dispatched;
+    ``banded_ok`` mirrors ``ArchConfig.banded_attn`` (the block-diagonal
+    realization can be disabled for analysis runs).
+    """
+    seq_q: int
+    seq_kv: int
+    heads: int
+    head_dim: int
+    causal: bool = True
+    window: int | None = None
+    batch: int = 1
+    quantized: bool = False
+    banded_ok: bool = True
+
+
+# Attention engines: all realized off-TPU (full/chunked/banded are plain
+# XLA; flash has an exact XLA realization), so none are backend-gated the
+# way PALLAS_ENGINES are.
+ATTN_ENGINES = ("full", "chunked", "banded", "flash")
+
+
+def attn_plan_key(attn: "AttnShape", backend: str) -> tuple:
+    """Plan-table key for an attention dispatch.
+
+    Unlike :func:`dense_plan_key` this keeps the sequence length: the
+    engine crossover is *about* S.  Batch is dropped — the serving engine
+    re-buckets batch per dispatch, and every engine verdict is
+    batch-monotone (a bigger batch only favors the tiled engines more).
+    """
+    return ("attn", attn.seq_q, attn.heads, attn.head_dim,
+            bool(attn.causal), attn.window or 0, bool(attn.quantized),
+            backend)
+
+
+def attn_engine_feasible(engine: str, attn: "AttnShape",
+                         backend: str | None = None) -> tuple[bool, str]:
+    """Can ``engine`` legally realize this attention geometry?
+
+    Mirrors :func:`engine_feasible` for the attention engine set; used by
+    plan compilation to validate overrides before pinning them.
+    """
+    from repro.kernels.attn_flash import flash_levels_exact
+
+    if engine == "banded":
+        if not attn.window:
+            return False, "banded is the sliding-window realization (no window here)"
+        return True, ""
+    if engine == "flash":
+        if not attn.quantized:
+            return False, ("flash consumes level-quantized q/k; dispatching"
+                           " it on an unquantized path would change numerics")
+        if attn.seq_q <= 1:
+            return False, "flash tiles over q blocks (decode steps stay full)"
+        if not flash_levels_exact(attn.head_dim, 8, 8):
+            return False, (f"flash score dot inexact at head_dim="
+                           f"{attn.head_dim} (exceeds the fp32 mantissa)")
+        return True, ""
+    if engine in ATTN_ENGINES:
+        return True, ""
+    return False, f"unknown attention engine {engine!r}"
+
+
+def select_attn_engine(attn: "AttnShape", backend: str | None = None) -> str:
+    """Pick the attention engine, plan table first.
+
+    Resolution order matches :func:`select_engine`: (1) an installed
+    ModelPlan's attention table (``compile_lm`` verdicts keyed by
+    :func:`attn_plan_key`), (2) the backend target's decision procedure
+    (:meth:`repro.api.targets.ComputeTarget.select_attn_engine`).
+    """
+    from repro.api.targets import target_for_backend
+
+    backend = backend or jax.default_backend()
+    hit = _PLAN_TABLE.get(attn_plan_key(attn, backend))
+    if hit is not None:
+        return hit
+    return target_for_backend(backend).select_attn_engine(attn)
+
+
 # The implicit-engine eligibility bounds and CPU/TPU crossover constants
 # (measured, benchmarks/bench_conv.py) moved to the HardwareTarget cost
 # tables in repro.api.targets — each ComputeTarget owns the constants its

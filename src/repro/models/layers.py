@@ -231,18 +231,33 @@ def attn_full(q, k, v, *, causal: bool, window: Optional[int],
     return out
 
 
-def _pick_chunk(n: int, target: int) -> int:
-    """Largest divisor of n that is <= target (handles e.g. 32768+256 vlm
-    sequences where a fixed power-of-two chunk does not divide S)."""
-    best = 1
-    d = 1
-    while d * d <= n:
-        if n % d == 0:
-            for c in (d, n // d):
-                if c <= target and c > best:
-                    best = c
-        d += 1
-    return best
+def _chunk_plan(n: int, target: int) -> tuple[int, int]:
+    """(chunk, padded_n) for the online-softmax scans.
+
+    Pads n up to a multiple of the target chunk instead of shrinking the
+    chunk to a divisor — the divisor rule degenerated on prime/awkward
+    lengths (S=1021 -> chunk=1, a 1021-step scan).  Padded slots carry
+    position -1, which the existing invalid-slot masking (``_mask``'s
+    ``jk >= 0``) zeroes out.
+    """
+    c = min(target, n)
+    return c, -(-n // c) * c
+
+
+def _pad_chunk_dim(x, padded: int, axis: int = 1):
+    pad = padded - x.shape[axis]
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _pad_positions(pos, padded: int):
+    pad = padded - pos.shape[0]
+    if pad == 0:
+        return pos
+    return jnp.concatenate([pos, jnp.full((pad,), -1, pos.dtype)])
 
 
 def attn_banded(q, k, v, *, window: int, q_pos, kv_pos,
@@ -273,18 +288,30 @@ def attn_banded(q, k, v, *, window: int, q_pos, kv_pos,
 
 
 def attn_chunked(q, k, v, *, causal: bool, window: Optional[int],
-                 q_pos, kv_pos, q_chunk: int = 1024, kv_chunk: int = 1024):
+                 q_pos, kv_pos, q_chunk: int = 1024, kv_chunk: int = 1024,
+                 skip_masked: bool = True):
     """Online-softmax attention, O(chunk^2) memory (prefill_32k path).
 
     Sequential scan over q chunks with an inner scan over kv chunks —
-    the pure-JAX flash-attention dataflow (fully masked chunks are
-    computed-and-zeroed; the §Perf log accounts for the causal 2x).
+    the pure-JAX flash-attention dataflow.  Fully masked kv chunks
+    (the causal upper triangle, out-of-window bands, all-padding chunks)
+    are skipped by a position-bound ``cond`` in the scan body: a skipped
+    chunk leaves the (m, l, acc) carry untouched, which is *bit-identical*
+    to computing it (its mask zeroes every softmax weight, so m_new = m,
+    corr = 1, and both l and acc accumulate exact zeros).  ~2x on causal
+    prefill; ``skip_masked=False`` keeps the compute-and-zero dataflow
+    (the bench's baseline row).
     """
     B, Sq, H, hd = q.shape
     Skv = k.shape[1]
-    q_chunk = _pick_chunk(Sq, q_chunk)
-    kv_chunk = _pick_chunk(Skv, kv_chunk)
-    Nq, Nk = Sq // q_chunk, Skv // kv_chunk
+    q_chunk, Sq_p = _chunk_plan(Sq, q_chunk)
+    kv_chunk, Skv_p = _chunk_plan(Skv, kv_chunk)
+    q = _pad_chunk_dim(q, Sq_p)
+    k = _pad_chunk_dim(k, Skv_p)
+    v = _pad_chunk_dim(v, Skv_p)
+    q_pos = _pad_positions(q_pos, Sq_p)
+    kv_pos = _pad_positions(kv_pos, Skv_p)
+    Nq, Nk = Sq_p // q_chunk, Skv_p // kv_chunk
     qs = q.reshape(B, Nq, q_chunk, H, hd).transpose(1, 0, 3, 2, 4)
     ks = k.reshape(B, Nk, kv_chunk, H, hd).transpose(1, 0, 3, 2, 4)
     vs = v.reshape(B, Nk, kv_chunk, H, hd).transpose(1, 0, 3, 2, 4)
@@ -294,8 +321,13 @@ def attn_chunked(q, k, v, *, causal: bool, window: Optional[int],
 
     def q_body(_, qc):
         qi, qpos = qc  # (B,H,Cq,hd), (Cq,)
+        # chunk-level position bounds: a kv chunk intersects this q
+        # chunk's mask iff some slot is valid (>= 0), at or before the
+        # latest query (causal), and inside the earliest query's window
+        qmax = jnp.max(qpos)
+        qmin = jnp.min(qpos)
 
-        def kv_body(carry, kc):
+        def compute(carry, kc):
             m_run, l_run, acc = carry
             kj, vj, kpos = kc
             s = jnp.einsum("bhqd,bhsd->bhqs", qi, kj,
@@ -309,7 +341,20 @@ def attn_chunked(q, k, v, *, causal: bool, window: Optional[int],
             acc = acc * corr[..., None] + jnp.einsum(
                 "bhqs,bhsd->bhqd", p.astype(vj.dtype), vj,
                 preferred_element_type=jnp.float32)
-            return (m_new, l_run, acc), None
+            return (m_new, l_run, acc)
+
+        def kv_body(carry, kc):
+            if not skip_masked:
+                return compute(carry, kc), None
+            kpos = kc[2]
+            alive = kpos >= 0
+            if causal:
+                alive &= kpos <= qmax
+            if window is not None:
+                alive &= kpos > qmin - window
+            return jax.lax.cond(jnp.any(alive),
+                                lambda c: compute(c, kc),
+                                lambda c: c, carry), None
 
         init = (
             jnp.full((B, H, q_chunk), NEG_INF, jnp.float32),
@@ -321,8 +366,8 @@ def attn_chunked(q, k, v, *, causal: bool, window: Optional[int],
         return None, out.astype(q.dtype)
 
     _, outs = jax.lax.scan(q_body, None, (qs, qp))  # (Nq,B,H,Cq,hd)
-    out = outs.transpose(1, 0, 3, 2, 4).reshape(B, Sq, H, hd)
-    return out
+    out = outs.transpose(1, 0, 3, 2, 4).reshape(B, Sq_p, H, hd)
+    return out[:, :Sq]
 
 
 # ---------------------------------------------------------------------------
@@ -362,11 +407,53 @@ class AttnCache:
     pos: jax.Array      # (L, B, S_slots) absolute positions, -1 = empty
 
 
+def attn_quantized(quant: QuantConfig, qmode: str) -> bool:
+    """Is this the integer-levels serve path (quantized-flash eligible)?
+
+    The flash engine consumes level-quantized q/k, so it may only be
+    dispatched where the projections already serve on integer levels —
+    never in training or on fp configs (their numerics must not change).
+    """
+    return (qmode == "serve" and quant.engine != "fp"
+            and quant.w_bits < 32 and quant.a_bits <= 8)
+
+
+def resolve_attn_engine(cfg, *, seq_q: int, seq_kv: int, heads: int,
+                        causal: bool, window: Optional[int],
+                        qmode: str = "train") -> str:
+    """Resolve the attention engine for one static geometry.
+
+    Asks the layered dispatcher (installed plan table, then the backend
+    target's decision procedure).  ``cfg.full_attn_analysis`` pins the
+    materialized-logits path (the analysis contract) without disturbing
+    the banded window realization, exactly as the old hardcoded
+    ``CHUNK_ATTN_THRESHOLD`` switch did.
+    """
+    from repro.kernels.ops import AttnShape, select_attn_engine
+
+    attn = AttnShape(
+        seq_q=seq_q, seq_kv=seq_kv, heads=heads, head_dim=cfg.hd,
+        causal=bool(causal), window=window,
+        quantized=attn_quantized(cfg.quant, qmode),
+        banded_ok=bool(getattr(cfg, "banded_attn", False)))
+    eng = select_attn_engine(attn)
+    if getattr(cfg, "full_attn_analysis", False) and eng in ("chunked",
+                                                             "flash"):
+        return "full"
+    return eng
+
+
 def attention_fwd(p, x, cfg, plan, *, mode: str, pos_offset=0,
                   cache_k=None, cache_v=None, cache_pos=None,
                   window: Optional[int] = None, causal: Optional[bool] = None,
-                  chunked: bool = False, qmode: str = "train"):
-    """Returns (out, (new_k, new_v, new_pos)) — cache parts None in train mode."""
+                  engine: Optional[str] = None, qmode: str = "train"):
+    """Returns (out, (new_k, new_v, new_pos)) — cache parts None in train mode.
+
+    ``engine`` pins one of ``kernels.ops.ATTN_ENGINES``
+    (full/chunked/banded/flash); ``None`` resolves it through
+    :func:`resolve_attn_engine`.  Decode steps always run ``full`` (one
+    query row — nothing to tile).
+    """
     B, S, d = x.shape
     hd = cfg.hd
     Hp = plan.padded_heads(cfg.n_heads)
@@ -402,11 +489,25 @@ def attention_fwd(p, x, cfg, plan, *, mode: str, pos_offset=0,
 
     kv, vv = expand_kv(kv, vv, cfg.n_heads, Hp)
     ldt = jnp.bfloat16 if getattr(cfg, "bf16_logits", False) else jnp.float32
-    if (window is not None and mode != "decode" and S > 2 * window
-            and getattr(cfg, "banded_attn", False)):
+    if mode == "decode":
+        engine = "full"
+    elif engine is None:
+        engine = resolve_attn_engine(
+            cfg, seq_q=S, seq_kv=kv.shape[1], heads=Hp, causal=causal,
+            window=window, qmode=qmode)
+    if engine == "banded" and window is not None and S > 2 * window:
         out = attn_banded(q, kv, vv, window=window, q_pos=q_pos,
                           kv_pos=kv_pos, logits_dtype=ldt)
-    elif chunked and mode != "decode":
+    elif engine == "flash" and S == kv.shape[1]:
+        # flash tiles contiguous prefill positions (masks consume only
+        # position differences, so the rope offset cancels); ragged
+        # cache geometries stay on the position-indexed paths above
+        from repro.kernels.attn_flash import attn_flash
+
+        bits = min(cfg.quant.a_bits, 8)
+        out = attn_flash(q, kv, vv, causal=bool(causal), window=window,
+                         q_bits=bits, k_bits=bits).astype(q.dtype)
+    elif engine in ("chunked", "banded", "flash"):
         out = attn_chunked(q, kv, vv, causal=causal, window=window,
                            q_pos=q_pos, kv_pos=kv_pos)
     else:

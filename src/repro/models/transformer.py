@@ -35,7 +35,11 @@ from .layers import (
     rms_norm,
 )
 
-CHUNK_ATTN_THRESHOLD = 8192  # use online-softmax chunked attention above this S
+# Attention realization (full / chunked / banded / flash) is no longer a
+# hardcoded sequence-length switch here: attention_fwd resolves it per
+# static geometry through kernels.ops.select_attn_engine — an installed
+# ModelPlan's attention table first, then the backend target's decision
+# procedure (api/targets.py cost tables).
 
 
 # ---------------------------------------------------------------------------
@@ -179,7 +183,7 @@ def cache_axes(cfg, plan):
 # Forward
 # ---------------------------------------------------------------------------
 
-def _run_block(kind, p, h, cfg, plan, *, mode, pos_offset, cache, chunked, qmode):
+def _run_block(kind, p, h, cfg, plan, *, mode, pos_offset, cache, qmode):
     """Returns (h, new_cache_for_block)."""
     if kind in ("attn", "moe", "attn_local"):
         window = cfg.window if kind == "attn_local" else None
@@ -189,7 +193,7 @@ def _run_block(kind, p, h, cfg, plan, *, mode, pos_offset, cache, chunked, qmode
         att, (nk, nv, npos) = attention_fwd(
             p["attn"], h, cfg, plan, mode=mode, pos_offset=pos_offset,
             cache_k=ck, cache_v=cv, cache_pos=cp, window=window,
-            chunked=chunked, qmode=qmode)
+            qmode=qmode)
         h = h + att
         aux = jnp.zeros((), jnp.float32)
         if kind == "moe":
@@ -229,13 +233,11 @@ def run_blocks(params, h, cfg, plan, *, mode="train", pos_offset=0, cache=None,
     n_super = cfg.n_layers // period
     rem_pattern = cfg.blocks_pattern[n_super * period :]
     counts = {k: pattern.count(k) for k in set(pattern)}
-    chunked = (h.shape[1] >= CHUNK_ATTN_THRESHOLD and mode != "decode"
-               and not cfg.full_attn_analysis)
 
     if not cfg.scan_layers:
         return _run_blocks_unrolled(params, h, cfg, plan, mode=mode,
                                     pos_offset=pos_offset, cache=cache,
-                                    qmode=qmode, chunked=chunked)
+                                    qmode=qmode)
 
     blocks = params["blocks"]
     grouped, rem_params = {}, {}
@@ -263,7 +265,7 @@ def run_blocks(params, h, cfg, plan, *, mode="train", pos_offset=0, cache=None,
                    if cache is not None and kind in cache else None)
             h, cu, a = _run_block(kind, p_i, h, cfg, plan, mode=mode,
                                   pos_offset=pos_offset, cache=c_i,
-                                  chunked=chunked, qmode=qmode)
+                                  qmode=qmode)
             h = _constrain_batch(h, cfg, plan)
             if cu is not None:
                 new_c[kind].append(cu)
@@ -289,7 +291,7 @@ def run_blocks(params, h, cfg, plan, *, mode="train", pos_offset=0, cache=None,
                if cache is not None and kind in cache else None)
         h, cu, a = _run_block(kind, p_i, h, cfg, plan, mode=mode,
                               pos_offset=pos_offset, cache=c_i,
-                              chunked=chunked, qmode=qmode)
+                              qmode=qmode)
         aux = aux + a
         if cu is not None:
             rem_new[kind].append(cu)
@@ -333,7 +335,7 @@ def _constrain_batch(h, cfg, plan):
 
 
 def _run_blocks_unrolled(params, h, cfg, plan, *, mode, pos_offset, cache,
-                         qmode, chunked):
+                         qmode):
     """Python-loop layer stack (analysis mode): every layer's ops appear
     explicitly in the HLO so cost_analysis trip-counts are exact."""
     blocks = params["blocks"]
@@ -349,7 +351,7 @@ def _run_blocks_unrolled(params, h, cfg, plan, *, mode, pos_offset, cache,
         def call(p_b, h_b, _kind=kind, _c=c_i):
             return _run_block(_kind, p_b, h_b, cfg, plan, mode=mode,
                               pos_offset=pos_offset, cache=_c,
-                              chunked=chunked, qmode=qmode)
+                              qmode=qmode)
 
         if cfg.remat and mode == "train":
             call = jax.checkpoint(call, prevent_cse=cfg.remat_prevent_cse)

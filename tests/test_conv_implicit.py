@@ -136,8 +136,14 @@ def test_select_engine_implicit_dispatch():
     deep = ConvShape(20, 20, 3, 3, 1, "SAME")      # kdim 3*3*64 = 576
     assert select_engine(800, 576, 128, 4, 1, backend="tpu",
                          conv=deep) == "implicit"
+    # on CPU this 64->128 channel-expanding conv sits below the measured
+    # cin=96 crossover (svhn L2 ran implicit at 0.63x gemm) -> f32dot
     assert select_engine(800, 576, 128, 4, 1, backend="cpu",
-                         conv=deep) == "implicit"
+                         conv=deep) == "f32dot"
+    # the non-expanding sibling (cin = cout = 64) stays implicit on CPU
+    same = ConvShape(20, 20, 3, 3, 1, "SAME")
+    assert select_engine(800, 576, 64, 4, 1, backend="cpu",
+                         conv=same) == "implicit"
     # 1x1 conv: no patch blowup -> never implicit
     one = ConvShape(20, 20, 1, 1, 1, "VALID")
     assert select_engine(800, 64, 128, 4, 1, backend="tpu",

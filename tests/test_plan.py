@@ -52,9 +52,12 @@ GOLDEN_CPU = {
     "svhn": {
         "conv0": {1: "fp", 8: "fp"},
         "conv1": {1: "implicit", 8: "implicit"},
-        "conv2": {1: "implicit", 8: "implicit"},
+        # channel-expanding with cin below the measured cin=96 CPU
+        # crossover (svhn L2 ran implicit at 0.63x gemm, crossover
+        # 32->64 at 0.77x in bench_conv): route the patch GEMM
+        "conv2": {1: "f32dot", 8: "f32dot"},
         "conv3": {1: "implicit", 8: "implicit"},
-        "conv4": {1: "implicit", 8: "implicit"},
+        "conv4": {1: "f32dot", 8: "f32dot"},
         "conv5": {1: "f32dot", 8: "implicit"},
         "conv6": {1: "f32dot", 8: "f32dot"},
         "conv7": {1: "fp", 8: "fp"},
