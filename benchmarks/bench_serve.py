@@ -326,10 +326,14 @@ def throughput_rows(fast: bool = False):
     imgs = [np.random.RandomState(i).uniform(size=(40, 40, 3))
             .astype(np.float32) for i in range(n_req)]
 
+    # max_pending=16 keeps the queue bound real at over-subscribed rates:
+    # the sweep's 2x/4x points actually hit QueueFull and go through
+    # ServeEngine.submit_retry (bounded backoff) instead of a queue that
+    # never fills at these request counts
     def cnn_engine(max_batch):
         return lambda: ServeEngine(CNNRunner(None, spec, None, plan=cnn_plan),
                                    max_batch=max_batch,
-                                   flush_deadline_s=0.002)
+                                   flush_deadline_s=0.002, max_pending=16)
 
     # LM workload: prefill + scanned greedy decode per request, projection
     # engines resolved once into the plan's dense verdict table
@@ -345,7 +349,7 @@ def throughput_rows(fast: bool = False):
         return lambda: ServeEngine(
             LMRunner(None, cfg, new_tokens=8, qmode="serve",
                      model_plan=lm_plan),
-            max_batch=max_batch, flush_deadline_s=0.002)
+            max_batch=max_batch, flush_deadline_s=0.002, max_pending=16)
 
     from repro.launch.engine import warm_engine
 

@@ -37,6 +37,10 @@ def main() -> None:
         from bench_attn import attn_rows
         return attn_rows(fast=fast)
 
+    def resilience(fast=False):
+        from bench_resilience import resilience_rows
+        return resilience_rows(fast=fast)
+
     fast = "--fast" in sys.argv
     strict = "--strict" in sys.argv  # exit nonzero if any job errors (CI)
     failed = []
@@ -53,6 +57,7 @@ def main() -> None:
         ("conv_implicit", conv_implicit, dict(fast=fast)),
         ("attn_flash", attn_flash, dict(fast=fast)),
         ("serve_fused", serve_fused, dict(fast=fast)),
+        ("resilience", resilience, dict(fast=fast)),
     ]
     print("name,us_per_call,derived")
     all_rows = {}

@@ -221,11 +221,29 @@ class CompiledModel:
 
     def serve(self, *, max_batch: int = 8, flush_deadline_s: float = 0.005,
               mesh=None, max_pending: int = 4096,
-              new_tokens: int = 16, qmode: str = "serve") -> Deployment:
-        """Stand up the request-level serving engine on this plan."""
+              new_tokens: int = 16, qmode: str = "serve",
+              resilience=None, fallback: "CompiledModel | None" = None,
+              ) -> Deployment:
+        """Stand up the request-level serving engine on this plan.
+
+        ``resilience`` (a :class:`repro.resilience.ResilienceConfig`)
+        swaps in the fault-surviving engine: seeded fault injection,
+        crash-consistent decode epoch checkpoints, retry/dead-letter
+        recovery, and — with ``fallback`` (a lower-bit CompiledModel of
+        the same architecture) — degraded-plan fallback (DESIGN.md §11).
+        """
         from repro.core.plan import PlanError
         from repro.launch.engine import CNNRunner, LMRunner, ServeEngine
 
+        if resilience is not None:
+            from repro.resilience import build_resilient_engine
+
+            engine = build_resilient_engine(
+                self, resilience, fallback=fallback, new_tokens=new_tokens,
+                qmode=qmode, max_batch=max_batch,
+                flush_deadline_s=flush_deadline_s, max_pending=max_pending,
+                mesh=mesh)
+            return Deployment(engine, self)
         if self.plan.kind == "lm":
             if self.model is None:
                 raise PlanError(

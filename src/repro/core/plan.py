@@ -396,6 +396,16 @@ def execute_cnn_layers(layers, params, x, quant: QuantConfig):
     return jnp.mean(h, axis=(1, 2))
 
 
+def plan_energy_pj(plan: ModelPlan) -> float:
+    """Modeled energy of one forward through the plan, in pJ — the sum of
+    the per-layer roofline cost annotations.  This is the currency of the
+    resilience degrade policy's energy budget
+    (:class:`repro.resilience.degrade.DegradePolicy`): per-sample, so a
+    dispatch of padded batch B spends ``B * plan_energy_pj(plan)``.
+    Layers compiled without annotations contribute zero."""
+    return float(sum(lp.cost[0] for lp in plan.layers if lp.cost))
+
+
 def layers_for_batch(plan: ModelPlan, batch: int):
     """The plan's layer sequence with engines re-pinned for ``batch`` (see
     :meth:`LayerPlan.engine_at` for the hint-miss policy)."""

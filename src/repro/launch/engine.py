@@ -282,6 +282,7 @@ class ServeEngine:
         self._ready: deque[Bucket] = deque()
         self._results: dict[int, Result] = {}
         self._fns: dict = {}
+        self._rng = np.random.RandomState(0)  # submit_retry backoff jitter
         self._next_rid = 0
         self._n_data = 1 if mesh is None else int(np.prod(mesh.devices.shape))
         if mesh is not None:
@@ -321,6 +322,32 @@ class ServeEngine:
         if bucket is not None:
             self._ready.append(bucket)
         return rid
+
+    def submit_retry(self, payload, t_submit: float | None = None, *,
+                     attempts: int = 6, base_s: float = 1e-3,
+                     max_s: float = 0.25,
+                     sleep: Callable[[float], None] = time.sleep) -> int:
+        """:meth:`submit` with bounded exponential backoff on QueueFull.
+
+        Every open-loop caller used to hand-roll the shed/retry dance;
+        this is the one blessed version: pump (dispatching is the only
+        thing that relieves backpressure), sleep a jittered exponentially
+        growing delay (capped at ``max_s``), retry — and re-raise
+        QueueFull after ``attempts`` tries so overload still surfaces
+        instead of blocking forever.  ``t_submit`` keeps the coordinated-
+        omission contract: the request is charged from its true arrival
+        time however long admission took.
+        """
+        for a in range(attempts):
+            try:
+                return self.submit(payload, t_submit=t_submit)
+            except QueueFull:
+                if a == attempts - 1:
+                    raise
+                self.pump()
+                delay = min(base_s * (1 << a), max_s)
+                sleep(delay * (0.5 + self._rng.uniform()))  # jitter [0.5,1.5)
+        raise AssertionError("unreachable")
 
     def pump(self) -> None:
         """Dispatch full buckets plus any whose flush deadline expired."""
@@ -471,8 +498,11 @@ def run_offered_load(engine: ServeEngine, payloads, rate_rps: float | None,
                 engine.pump()  # flush deadline-expired buckets while idle
                 time.sleep(2e-4)
         # when the driver runs behind schedule (over-subscription), the
-        # request still ARRIVED at t_arrive: charge the backlog wait to it
-        engine.submit(p, t_submit=t_arrive)
+        # request still ARRIVED at t_arrive: charge the backlog wait to it.
+        # submit_retry keeps the sweep honest at rates past saturation:
+        # backpressure becomes bounded backoff instead of a crash, and the
+        # admission wait lands in the request's latency via t_submit
+        engine.submit_retry(p, t_submit=t_arrive)
         engine.pump()
     results = engine.drain()
     wall = clock() - t0

@@ -178,6 +178,59 @@ def run_throughput(params, cfg, qmode: str, args, model_plan=None) -> None:
         print(f"offered {row['offered_rps']:>8} req/s: {json.dumps(row)}")
 
 
+def run_chaos(params, cfg, qmode: str, args, model_plan=None) -> None:
+    """Fault-injected serving mode (``--chaos-mtbf``): drive the resilient
+    engine (``repro.resilience``) under a seeded exponential fault schedule
+    with K-step decode epoch checkpoints, then verify every completed
+    request against a fault-free run of the same engine configuration and
+    print the recovery statistics.  The benchmark-grade sweep lives in
+    ``benchmarks/bench_resilience.py``; this is the operational entry."""
+    import tempfile
+
+    import numpy as np
+
+    from repro.resilience import (EpochLMRunner, FaultPlan,
+                                  ResilientServeEngine)
+
+    prompts = [np.random.RandomState(i)
+               .randint(0, cfg.vocab, size=(args.prompt_len,))
+               .astype(np.int32) for i in range(args.requests)]
+
+    def mk(ckdir):
+        runner = EpochLMRunner(params, cfg, new_tokens=args.new_tokens,
+                               epoch_steps=args.epoch_steps, qmode=qmode,
+                               model_plan=model_plan)
+        return ResilientServeEngine(runner, checkpoint_dir=ckdir,
+                                    max_batch=args.batch,
+                                    flush_deadline_s=args.flush_deadline_ms
+                                    / 1e3, max_retries=1000)
+
+    ckroot = args.checkpoint_dir or tempfile.mkdtemp(prefix="chaos_ckpt_")
+    ref = [r.value for r in mk(None).serve(list(prompts))]
+    eng = mk(ckroot)
+    eng.faults = FaultPlan(args.chaos_mtbf, seed=args.chaos_seed)
+    t0 = time.perf_counter()
+    res = eng.serve(list(prompts))
+    wall = time.perf_counter() - t0
+    identical = len(res) == len(ref) and all(
+        np.array_equal(r.value, v) for r, v in zip(res, ref))
+    s = eng.stats
+    print(f"arch={cfg.name} chaos: mtbf={args.chaos_mtbf} steps "
+          f"(seed {args.chaos_seed}), K={args.epoch_steps}, "
+          f"requests={len(prompts)}")
+    print(f"completed {len(res)}/{len(prompts)} in {wall:.2f}s, "
+          f"bit-identical to fault-free: {identical}")
+    print(f"faults={s['faults']} (power={s['power_losses']} "
+          f"drop={s['device_drops']} slow={s['slow_dispatches']} "
+          f"staging={s['staging_retries']}) retries={s['retries']} "
+          f"dead={s['dead_lettered']}")
+    print(f"prefills={s['prefills']} resumes={s['resumes']} "
+          f"epochs={s['epochs']} commits={s['commits']} "
+          f"executed_steps={s['executed_steps']} "
+          f"useful_steps={s['useful_steps']} "
+          f"wasted_steps={s['wasted_steps']:.2f}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="phi3-mini-3.8b")
@@ -213,6 +266,19 @@ def main():
                     help="--throughput: number of independent requests")
     ap.add_argument("--flush-deadline-ms", type=float, default=2.0,
                     help="--throughput: max bucket queueing delay")
+    ap.add_argument("--chaos-mtbf", type=float, default=None, metavar="STEPS",
+                    help="fault-injected serving: mean decode steps between "
+                         "faults (exponential schedule, repro.resilience); "
+                         "runs the resilient engine and verifies outputs "
+                         "against a fault-free run")
+    ap.add_argument("--chaos-seed", type=int, default=0,
+                    help="--chaos-mtbf: fault schedule seed")
+    ap.add_argument("--epoch-steps", type=int, default=4,
+                    help="--chaos-mtbf: decode checkpoint period K (the "
+                         "paper's NV write period P, in decode steps)")
+    ap.add_argument("--checkpoint-dir", default=None, metavar="DIR",
+                    help="--chaos-mtbf: decode epoch checkpoint directory "
+                         "(default: a fresh temp dir)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -247,6 +313,9 @@ def main():
     elif args.prequant and qmode == "serve":
         from repro.models.layers import prequantize_params
         params = prequantize_params(params, cfg)
+    if args.chaos_mtbf is not None:
+        run_chaos(params, cfg, qmode, args, model_plan=model_plan)
+        return
     if args.throughput:
         run_throughput(params, cfg, qmode, args, model_plan=model_plan)
         return

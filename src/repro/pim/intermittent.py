@@ -32,6 +32,23 @@ def forward_progress(n_frames: int, frame_time_us: float, mtbf_us: float,
     a plan on disk (``core/plan.save_plan``) just reloads it (small).
     :func:`plan_resume_study` sweeps exactly this comparison.
     """
+    # validate before the simulation loop: mtbf_us <= 0 would make every
+    # exponential draw zero (an infinite failure loop inside the budget),
+    # and the others silently return nonsense statistics
+    if n_frames <= 0:
+        raise ValueError(f"n_frames must be positive, got {n_frames}")
+    if frame_time_us <= 0:
+        raise ValueError(f"frame_time_us must be positive, "
+                         f"got {frame_time_us}")
+    if mtbf_us <= 0:
+        raise ValueError(f"mtbf_us must be positive, got {mtbf_us}")
+    if checkpoint_period_frames < 0:
+        raise ValueError(f"checkpoint_period_frames must be >= 0 "
+                         f"(0 = volatile), got {checkpoint_period_frames}")
+    if nv_write_us < 0:
+        raise ValueError(f"nv_write_us must be >= 0, got {nv_write_us}")
+    if resume_us < 0:
+        raise ValueError(f"resume_us must be >= 0, got {resume_us}")
     rng = np.random.RandomState(seed)
     t = 0.0
     committed = 0          # frames durably retained

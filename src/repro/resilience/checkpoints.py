@@ -1,0 +1,98 @@
+"""Crash-consistent decode micro-checkpoints (DESIGN.md §11).
+
+The paper's NV-FA retains partial accumulation state through power loss so
+a frame never restarts from scratch (§II-B3); the serving analogue is the
+decode epoch: the scanned greedy decode is segmented into K-step epochs,
+and after each epoch the bucket's full decode state — KV cache, last
+token, position, every token emitted so far — commits through the atomic
+:class:`repro.train.checkpoint.Checkpointer` (write tmp -> fsync ->
+rename).  A request killed mid-decode resumes from its last committed
+epoch; K plays exactly the role of the paper's checkpoint period P, and
+``benchmarks/bench_resilience.py`` sweeps it against the analytic
+``pim/intermittent.forward_progress`` curves.
+
+Checkpoints are keyed by a **composition tag**: a hash of the bucket's
+request ids, its shape key, the plan fingerprint, and the epoch length.
+The LM engine's bit-identity contract holds at fixed bucket composition,
+so a checkpoint is only ever resumed by a re-dispatch of the *same*
+requests under the *same* plan — anything else (a partially dead-lettered
+bucket, a degraded plan) hashes to a different tag and restarts cleanly
+from prefill.
+
+Restore is template-free in the crash sense: the state *structure* is
+rebuilt from the model config (``runner.decode_state_template``) and the
+emitted-token count recorded in the checkpoint manifest, so a rebooted
+process needs nothing volatile to resume — only the directory.
+"""
+from __future__ import annotations
+
+import hashlib
+import time
+
+from repro.train.checkpoint import Checkpointer
+
+
+class DecodeCheckpointer:
+    """Per-bucket epoch checkpoints over the atomic ``Checkpointer``.
+
+    Writes are synchronous: the commit IS the durability point the
+    resilience contract counts on (an async write racing a power loss is
+    exactly the window the paper's NV-FA closes), and its measured cost is
+    the ``nv_write_us`` of the analytic model.
+    """
+
+    def __init__(self, directory: str, keep: int = 2):
+        self.dir = directory
+        self._ck = Checkpointer(directory, keep=keep, async_save=False)
+
+    # -- identity ------------------------------------------------------------
+
+    @staticmethod
+    def tag(rids, shape_key, plan_fp, epoch_steps: int) -> str:
+        blob = repr((tuple(rids), shape_key, plan_fp,
+                     int(epoch_steps))).encode()
+        return "dec" + hashlib.sha256(blob).hexdigest()[:16]
+
+    # -- commit / restore ----------------------------------------------------
+
+    def commit(self, tag: str, epoch: int, state: dict,
+               emitted: int) -> float:
+        """Durably commit one epoch's state; returns the write seconds.
+
+        ``epoch`` counts committed epochs: 0 after prefill, e+1 after
+        decode epoch e.  ``emitted`` (tokens per request so far) goes into
+        the manifest so restore can rebuild the token-buffer template
+        without any volatile knowledge.
+        """
+        t0 = time.perf_counter()
+        self._ck.save(int(epoch), state, extra=dict(emitted=int(emitted)),
+                      tag=tag)
+        return time.perf_counter() - t0
+
+    def latest(self, tag: str):
+        return self._ck.latest_step(tag)
+
+    def restore(self, tag: str, template_fn):
+        """Resume state for ``tag``: ``(committed_epochs, state)`` or None.
+
+        ``template_fn(emitted) -> state pytree`` supplies the structure
+        (from model config, not from any live object) for the flat-array
+        unflatten.
+        """
+        step = self._ck.latest_step(tag)
+        if step is None:
+            return None
+        emitted = int(self._ck.manifest(step, tag)["extra"]["emitted"])
+        _, state = self._ck.restore(template_fn(emitted), step, tag)
+        return step, state
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def purge(self, tag: str) -> int:
+        """Drop every epoch of one completed/abandoned bucket."""
+        return self._ck.purge(tag)
+
+    def purge_all(self) -> int:
+        """Drop everything — e.g. after a plan degrade, when every
+        outstanding checkpoint refers to the retired plan fingerprint."""
+        return self._ck.purge("dec")

@@ -56,6 +56,13 @@ class Checkpointer:
         self._thread: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
         os.makedirs(directory, exist_ok=True)
+        # sweep stale .tmp_* dirs left by a process killed mid-write: they
+        # never published (rename never ran) so they hold no durable state,
+        # but they escape keep-k GC and would otherwise accumulate forever
+        for name in os.listdir(directory):
+            if name.startswith(".tmp_"):
+                shutil.rmtree(os.path.join(directory, name),
+                              ignore_errors=True)
 
     # -- save ---------------------------------------------------------------
     def save(self, step: int, state: Any, extra: dict | None = None,
@@ -147,6 +154,22 @@ class Checkpointer:
         path = os.path.join(self.dir, f"{tag}_{step:08d}", "manifest.json")
         with open(path) as f:
             return json.load(f)
+
+    def purge(self, prefix: str) -> int:
+        """Remove every published checkpoint whose name starts with
+        ``prefix``; returns how many were removed.  Prefix (not exact-tag)
+        matching on purpose: families of derived tags (e.g. the resilience
+        layer's ``dec<hash>`` composition tags) can be dropped wholesale
+        with their common stem.  Waits for any in-flight async save first
+        so a concurrent write cannot republish what was just purged."""
+        self.wait()
+        n = 0
+        for name in list(os.listdir(self.dir)):
+            if name.startswith(prefix) and not name.startswith("."):
+                shutil.rmtree(os.path.join(self.dir, name),
+                              ignore_errors=True)
+                n += 1
+        return n
 
     def _gc(self, tag: str):
         entries = sorted(

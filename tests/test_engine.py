@@ -61,6 +61,18 @@ def test_batcher_deadline_flush():
     assert b.pending() == 0
 
 
+def test_batcher_deadline_exact_boundary():
+    """The deadline comparison is inclusive: a bucket whose oldest request
+    has waited EXACTLY flush_deadline_s flushes now, not one poll later
+    (pollers quantize time; an exclusive compare would add a full poll
+    interval of tail latency)."""
+    b = BucketBatcher(max_batch=8, flush_deadline_s=0.010)
+    b.add(_req(0), "k", now=0.0)
+    exp = b.take_expired(now=0.010)
+    assert len(exp) == 1 and exp[0].requests[0].rid == 0
+    assert b.pending() == 0
+
+
 def test_batcher_take_all_drains_partials():
     b = BucketBatcher(max_batch=8, flush_deadline_s=1.0)
     b.add(_req(0), "a", now=0.0)
@@ -170,6 +182,62 @@ def test_queue_backpressure():
     eng2.submit(IMGS[0])
     with pytest.raises(QueueFull):
         eng2.submit(IMGS[1])
+
+
+def test_queue_drain_then_resubmit_roundtrip():
+    """After QueueFull, drain() relieves the pressure and the SAME payloads
+    resubmit cleanly; every rid maps to the result of its own payload
+    across the drain boundary (rids never recycle)."""
+    eng = ServeEngine(CNNRunner(SERVE_PARAMS, SPEC, W1A4), max_batch=2,
+                      max_pending=2)
+    ref = [r.value for r in _cnn_engine(W1A4, 1).serve(IMGS[:4])]
+    rid_to_img = {eng.submit(IMGS[0]): 0, eng.submit(IMGS[1]): 1}
+    with pytest.raises(QueueFull):
+        eng.submit(IMGS[2])
+    first = eng.drain()
+    assert sorted(r.rid for r in first) == sorted(rid_to_img)
+    rid_to_img.update({eng.submit(IMGS[2]): 2, eng.submit(IMGS[3]): 3})
+    second = eng.drain()
+    assert {r.rid for r in second}.isdisjoint({r.rid for r in first})
+    for r in first + second:
+        np.testing.assert_array_equal(r.value, ref[rid_to_img[r.rid]])
+
+
+def test_submit_retry_backoff_until_admitted():
+    """submit_retry turns QueueFull into bounded jittered backoff: with the
+    queue full, retries pump (dispatching relieves the pressure) and the
+    request is admitted — no sleep escapes into the test (injected fake)."""
+    eng = ServeEngine(CNNRunner(SERVE_PARAMS, SPEC, W1A4), max_batch=2,
+                      max_pending=2)
+    eng.submit(IMGS[0])
+    eng.submit(IMGS[1])     # full bucket -> _ready; queue at max_pending
+    slept = []
+    rid = eng.submit_retry(IMGS[2], attempts=3, base_s=0.001, max_s=0.004,
+                           sleep=slept.append)
+    assert rid == 2
+    # first attempt hit QueueFull, pump() dispatched the ready bucket,
+    # second attempt was admitted after exactly one jittered backoff
+    assert len(slept) == 1 and 0.0005 <= slept[0] < 0.0015
+    assert len(eng.drain()) == 3
+
+
+def test_submit_retry_exhausts_and_reraises():
+    """When nothing can relieve the pressure (all load in one open partial
+    bucket below max_batch), submit_retry re-raises QueueFull after its
+    attempt budget — overload surfaces, it doesn't block forever."""
+    eng = ServeEngine(CNNRunner(SERVE_PARAMS, SPEC, W1A4), max_batch=8,
+                      max_pending=1, flush_deadline_s=1e9)
+    eng.submit(IMGS[0])     # partial bucket: pump() can't flush it
+    slept = []
+    with pytest.raises(QueueFull):
+        eng.submit_retry(IMGS[1], attempts=4, base_s=0.001, max_s=0.002,
+                         sleep=slept.append)
+    # attempts-1 sleeps (no sleep after the final failure), delays
+    # exponential then capped, each jittered in [0.5, 1.5) of nominal
+    assert len(slept) == 3
+    for d, nominal in zip(slept, (0.001, 0.002, 0.002)):
+        assert 0.5 * nominal <= d < 1.5 * nominal
+    assert len(eng.drain()) == 1  # the queued request was never lost
 
 
 def test_serve_closed_loop_survives_tiny_max_pending():

@@ -99,6 +99,36 @@ def test_checkpointer_atomic_and_gc(tmp_path):
     assert not [n for n in names if n.startswith(".tmp_")]
 
 
+def test_checkpointer_init_sweeps_stale_tmp_dirs(tmp_path):
+    """A process killed mid-write leaves an unpublished .tmp_* dir; it holds
+    no durable state (rename never ran) but escapes keep-k GC.  Construction
+    sweeps them — and leaves published checkpoints alone."""
+    ck = Checkpointer(str(tmp_path), keep=2, async_save=False)
+    ck.save(1, dict(w=jnp.ones((2,))))
+    stale = tmp_path / ".tmp_killed_mid_write"
+    stale.mkdir()
+    (stale / "arrays.npz").write_bytes(b"partial")
+    ck2 = Checkpointer(str(tmp_path), keep=2, async_save=False)
+    names = sorted(os.listdir(tmp_path))
+    assert not [n for n in names if n.startswith(".tmp_")]
+    assert ck2.latest_step() == 1  # the published checkpoint survived
+
+
+def test_checkpointer_purge_is_prefix_matching(tmp_path):
+    """purge("dec") drops the whole dec<hash> tag family (the resilience
+    layer's composition tags) without touching other tags."""
+    ck = Checkpointer(str(tmp_path), keep=5, async_save=False)
+    state = dict(w=jnp.ones((2,)))
+    ck.save(1, state, tag="decaaaa")
+    ck.save(2, state, tag="decbbbb")
+    ck.save(3, state, tag="ckpt")
+    assert ck.purge("dec") == 2
+    assert ck.latest_step("decaaaa") is None
+    assert ck.latest_step("decbbbb") is None
+    assert ck.latest_step("ckpt") == 3
+    assert ck.purge("dec") == 0  # idempotent
+
+
 def test_checkpoint_async_roundtrip(tmp_path):
     ck = Checkpointer(str(tmp_path), async_save=True)
     state = dict(a=jnp.ones((4, 4)), b=[jnp.zeros(3), jnp.full((2,), 7.0)])
@@ -181,6 +211,25 @@ def test_forward_progress_p0_vs_p20_ordering():
         rful = forward_progress(50, 1.0, 1e9, 0, seed=seed)
         assert rful["completed_frames"] == 50
         assert rful["efficiency"] > 0.9
+
+
+def test_forward_progress_rejects_bad_inputs():
+    """mtbf_us <= 0 would make every exponential draw zero (an infinite
+    failure loop inside the budget); the rest silently produce nonsense —
+    all must raise up front, in the sweep helper too."""
+    from repro.pim.intermittent import forward_progress, sweep_checkpoint_period
+
+    good = dict(n_frames=10, frame_time_us=1.0, mtbf_us=40.0,
+                checkpoint_period_frames=2)
+    forward_progress(**good)  # sanity: the base point is valid
+    for bad in (dict(mtbf_us=0.0), dict(mtbf_us=-1.0), dict(n_frames=0),
+                dict(n_frames=-5), dict(frame_time_us=0.0),
+                dict(checkpoint_period_frames=-1), dict(nv_write_us=-0.1),
+                dict(resume_us=-1.0)):
+        with pytest.raises(ValueError):
+            forward_progress(**{**good, **bad})
+    with pytest.raises(ValueError):
+        sweep_checkpoint_period(n_frames=10, frame_time_us=1.0, mtbf_us=0.0)
 
 
 def test_vulnerable_window_model():

@@ -1,0 +1,436 @@
+"""Executable intermittency resilience (repro.resilience, DESIGN.md §11).
+
+Headline contract (ISSUE acceptance): under a seeded FaultPlan, every
+completed request's output is BIT-IDENTICAL to the fault-free run — across
+kill points in prefill, mid-decode-epoch, staging, and single-shot CNN
+dispatch — and recovery is idempotent (same rid, one result, no
+duplicates).  Plus: deterministic fault schedules, crash-consistent resume
+from the last committed epoch, bounded retries -> dead letters, deadlines,
+and degraded-plan fallback.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import SINGLE, all_configs
+from repro.core.quant import PAPER_CONFIGS, W1A4
+from repro.core.prequant import prequantize_cnn_params
+from repro.launch.engine import CNNRunner, ServeEngine
+from repro.models import transformer as T
+from repro.models.cnn import init_cnn, svhn_cnn_spec
+from repro.resilience import (DegradePolicy, DeviceDrop, EpochLMRunner,
+                              FaultPlan, PowerLoss, ResilientServeEngine)
+
+VOCAB = 64
+NEW_TOKENS = 7          # 6 decode steps; epoch_steps=2 -> schedule (2, 2, 2)
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan: determinism, validation, site/kind discipline
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_deterministic_and_logged():
+    def events(seed):
+        p = FaultPlan(3.0, seed=seed)
+        for _ in range(40):
+            p.poll("decode", dt=2.0)
+        return [(e.kind, e.site, e.t, e.offset, e.seq) for e in p.log]
+
+    a, b = events(5), events(5)
+    assert a and a == b                      # same seed -> same schedule
+    assert events(6) != a                    # different seed -> different
+    # at most one event per poll, clock stops at the fault
+    p = FaultPlan(0.5, seed=0)
+    ev = p.poll("decode", dt=4.0)
+    assert ev is not None and ev.offset <= 4.0 and p._t == ev.t
+
+
+def test_fault_plan_validation():
+    with pytest.raises(ValueError):
+        FaultPlan(0.0)
+    with pytest.raises(ValueError):
+        FaultPlan(-1.0)
+    with pytest.raises(ValueError):
+        FaultPlan(1.0, weights={"meteor_strike": 1.0})
+    with pytest.raises(ValueError):
+        FaultPlan.scripted([("nowhere", 0, "power_loss")])
+    with pytest.raises(ValueError):
+        # device_drop is not physically meaningful during staging
+        FaultPlan.scripted([("staging", 0, "device_drop")])
+    assert FaultPlan(None).poll("decode") is None   # never fires
+
+
+def test_fault_plan_scripted_fires_nth_poll_per_site():
+    p = FaultPlan.scripted([("decode", 1, "power_loss"),
+                            ("staging", 0, "staging_corruption")])
+    assert p.poll("staging", dt=0.5).kind == "staging_corruption"
+    assert p.poll("decode") is None
+    assert p.poll("decode").kind == "power_loss"
+    assert p.poll("decode") is None
+    assert [e.kind for e in p.log] == ["staging_corruption", "power_loss"]
+
+
+def test_fault_plan_site_restricted_kinds():
+    p = FaultPlan(0.1, seed=1)       # fires on nearly every poll
+    for _ in range(50):
+        p.poll("staging", dt=1.0)
+    assert p.log
+    assert all(e.kind in ("power_loss", "staging_corruption")
+               for e in p.log)
+
+
+# ---------------------------------------------------------------------------
+# LM chaos: kill points at every site, resume, bit-identity
+# ---------------------------------------------------------------------------
+
+def _lm_setup():
+    cfg = dataclasses.replace(
+        all_configs()["smollm-360m"].smoke(
+            n_layers=2, d_model=64, n_heads=2, n_kv_heads=1, d_ff=128,
+            vocab=VOCAB, head_dim=32),
+        quant=PAPER_CONFIGS["w1a8"])
+    params, _ = T.init_lm(jax.random.PRNGKey(0), cfg, SINGLE)
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def lm():
+    cfg, params = _lm_setup()
+    prompts = [np.random.RandomState(i).randint(0, VOCAB, size=(8,))
+               .astype(np.int32) for i in range(4)]
+
+    def mk(fault_plan=None, ckdir=None, **kw):
+        runner = EpochLMRunner(params, cfg, new_tokens=NEW_TOKENS,
+                               epoch_steps=2)
+        return ResilientServeEngine(runner, fault_plan=fault_plan,
+                                    checkpoint_dir=ckdir, max_batch=4, **kw)
+
+    ref = [r.value for r in mk().serve(prompts)]
+    return dict(cfg=cfg, params=params, prompts=prompts, mk=mk, ref=ref)
+
+
+def _assert_identical(results, ref):
+    assert len(results) == len(ref)
+    for r, v in zip(results, ref):
+        np.testing.assert_array_equal(r.value, v)
+
+
+def test_lm_epoch_schedule():
+    cfg, params = _lm_setup()
+    r = EpochLMRunner(params, cfg, new_tokens=8, epoch_steps=3)
+    assert r.epoch_schedule() == (3, 3, 1)          # non-divisible tail
+    r = EpochLMRunner(params, cfg, new_tokens=7, epoch_steps=2)
+    assert r.epoch_schedule() == (2, 2, 2)
+    with pytest.raises(ValueError):
+        EpochLMRunner(params, cfg, new_tokens=8, epoch_steps=0)
+
+
+def test_lm_kill_in_prefill_bit_identical(lm, tmp_path):
+    eng = lm["mk"](FaultPlan.scripted([("prefill", 0, "power_loss")]),
+                   ckdir=str(tmp_path))
+    res = eng.serve(lm["prompts"])
+    assert eng.stats["power_losses"] == 1 and eng.stats["retries"] == 4
+    _assert_identical(res, lm["ref"])
+
+
+def test_lm_kill_mid_decode_resumes_from_epoch(lm, tmp_path):
+    """A kill in decode epoch 1 must NOT rerun prefill: the retry restores
+    the committed (epoch-1) state — the software NV-FA partial-state
+    retention — and still produces bit-identical tokens."""
+    eng = lm["mk"](FaultPlan.scripted([("decode", 1, "power_loss")]),
+                   ckdir=str(tmp_path))
+    res = eng.serve(lm["prompts"])
+    s = eng.stats
+    assert s["prefills"] == 1           # prefill ran exactly once
+    assert s["resumes"] == 1            # the retry resumed, not restarted
+    # the kill fired at epoch 1's gate (before it ran), so resume replays
+    # nothing: epoch 0 + epochs 1..2 = 3 total, all useful
+    assert s["epochs"] == 3
+    assert s["executed_steps"] == s["useful_steps"] == 6
+    _assert_identical(res, lm["ref"])
+
+
+def test_lm_kill_without_checkpoints_restarts_clean(lm):
+    """No checkpoint dir = the volatile P=0 baseline: the kill restarts
+    the bucket from prefill, and the output is still bit-identical."""
+    eng = lm["mk"](FaultPlan.scripted([("decode", 1, "power_loss")]))
+    res = eng.serve(lm["prompts"])
+    assert eng.stats["prefills"] == 2 and eng.stats["resumes"] == 0
+    _assert_identical(res, lm["ref"])
+
+
+def test_lm_kill_in_staging_bit_identical(lm, tmp_path):
+    eng = lm["mk"](FaultPlan.scripted([("staging", 0, "power_loss")]),
+                   ckdir=str(tmp_path))
+    res = eng.serve(lm["prompts"])
+    assert eng.stats["power_losses"] == 1
+    _assert_identical(res, lm["ref"])
+
+
+def test_lm_staging_corruption_detected_and_restaged(lm):
+    eng = lm["mk"](FaultPlan.scripted([("staging", 0,
+                                        "staging_corruption")]))
+    res = eng.serve(lm["prompts"])
+    assert eng.stats["staging_retries"] == 1        # checksum caught it
+    assert eng.stats["faults"] == 0                 # not a kill
+    _assert_identical(res, lm["ref"])
+
+
+def test_lm_device_drop_and_slow_dispatch(lm, tmp_path):
+    eng = lm["mk"](FaultPlan.scripted([("decode", 0, "device_drop"),
+                                       ("decode", 2, "slow_dispatch")]),
+                   ckdir=str(tmp_path))
+    res = eng.serve(lm["prompts"])
+    assert eng.stats["device_drops"] == 1
+    assert eng.stats["slow_dispatches"] == 1
+    _assert_identical(res, lm["ref"])
+
+
+def test_lm_random_chaos_bit_identical(lm, tmp_path):
+    """Seeded exponential schedule (not scripted): everything completes and
+    matches the fault-free run bit for bit."""
+    eng = lm["mk"](FaultPlan(6.0, seed=3), ckdir=str(tmp_path),
+                   max_retries=50)
+    res = eng.serve(lm["prompts"])
+    assert eng.stats["faults"] >= 1                 # chaos actually happened
+    assert not eng.dead_letters
+    _assert_identical(res, lm["ref"])
+
+
+def test_lm_idempotent_requeue_no_duplicate_results(lm, tmp_path):
+    """Killed-bucket requests keep their rid; one Result per rid, and rids
+    are exactly the submitted ones."""
+    eng = lm["mk"](FaultPlan.scripted([("prefill", 0, "power_loss"),
+                                       ("decode", 1, "power_loss")]),
+                   ckdir=str(tmp_path))
+    rids = [eng.submit(p) for p in lm["prompts"]]
+    res = eng.drain()
+    assert [r.rid for r in res] == sorted(rids)
+    assert len({r.rid for r in res}) == len(rids)
+    _assert_identical(res, lm["ref"])
+
+
+# ---------------------------------------------------------------------------
+# CNN path: single-shot dispatch kills, vs the PLAIN engine's output
+# ---------------------------------------------------------------------------
+
+SPEC = svhn_cnn_spec(8)
+_params, _ = init_cnn(jax.random.PRNGKey(0), SPEC)
+CNN_PARAMS = prequantize_cnn_params(_params, SPEC, W1A4)
+IMGS = [np.random.RandomState(i).uniform(size=(16, 16, 3)).astype(np.float32)
+        for i in range(4)]
+
+
+def test_cnn_dispatch_kill_bit_identical_to_plain_engine():
+    ref = ServeEngine(CNNRunner(CNN_PARAMS, SPEC, W1A4),
+                      max_batch=4).serve(IMGS)
+    eng = ResilientServeEngine(
+        CNNRunner(CNN_PARAMS, SPEC, W1A4),
+        fault_plan=FaultPlan.scripted([("dispatch", 0, "power_loss"),
+                                       ("staging", 1,
+                                        "staging_corruption")]),
+        max_batch=4)
+    res = eng.serve(IMGS)
+    assert eng.stats["power_losses"] == 1
+    assert eng.stats["staging_retries"] == 1
+    for a, b in zip(ref, res):
+        np.testing.assert_array_equal(a.value, b.value)
+
+
+def test_mesh_rejected():
+    class FakeMesh:
+        pass
+
+    with pytest.raises(ValueError):
+        ResilientServeEngine(CNNRunner(CNN_PARAMS, SPEC, W1A4),
+                             mesh=FakeMesh())
+
+
+# ---------------------------------------------------------------------------
+# Recovery policy: retries bounded, deadlines, dead letters
+# ---------------------------------------------------------------------------
+
+def test_retry_exhaustion_dead_letters():
+    eng = ResilientServeEngine(
+        CNNRunner(CNN_PARAMS, SPEC, W1A4),
+        fault_plan=FaultPlan.scripted(
+            [("dispatch", i, "power_loss") for i in range(3)]),
+        max_batch=4, max_retries=2)
+    res = eng.serve(IMGS)
+    assert res == []
+    assert set(eng.dead_letters) == set(range(4))
+    assert all("retries exhausted" in v for v in eng.dead_letters.values())
+    assert eng.stats["dead_lettered"] == 4
+    # the engine stays serviceable: the next submit round succeeds (poll 3
+    # has no scripted fault) and gets fresh rids
+    res2 = eng.serve(IMGS)
+    assert len(res2) == 4 and set(eng.dead_letters) == set(range(4))
+
+
+def test_deadline_dead_letters_with_fake_clock():
+    t = [0.0]
+    eng = ResilientServeEngine(
+        CNNRunner(CNN_PARAMS, SPEC, W1A4),
+        fault_plan=FaultPlan.scripted([("dispatch", 0, "power_loss")]),
+        max_batch=4, deadline_s=5.0, clock=lambda: t[0],
+        backoff_base_s=0.0, backoff_max_s=0.0)
+    for img in IMGS:
+        eng.submit(img)     # 4th submit fills the bucket
+    t[0] = 1.0
+    eng.pump()              # dispatch -> scripted kill -> requeued, in time
+    t[0] = 10.0             # past every deadline before the retry lands
+    res = eng.drain()
+    assert res == []
+    assert all(v == "deadline" for v in eng.dead_letters.values())
+    assert len(eng.dead_letters) == 4
+
+
+def test_backoff_schedule_is_bounded_and_jittered():
+    eng = ResilientServeEngine(
+        CNNRunner(CNN_PARAMS, SPEC, W1A4),
+        fault_plan=FaultPlan.scripted(
+            [("dispatch", i, "power_loss") for i in range(4)]),
+        max_batch=1, max_retries=4, backoff_base_s=0.01, backoff_max_s=0.03,
+        clock=lambda: 0.0)
+    eng.submit(IMGS[0])
+    delays = []
+    for _ in range(4):
+        eng._flush_all()                      # dispatch -> kill -> requeue
+        (eligible_at, _), = eng._retry
+        delays.append(eligible_at)
+        eng._admit_retries(force=True)
+    # exponential growth up to the cap, jitter in [0.5, 1.5) of nominal
+    for d, nominal in zip(delays, (0.01, 0.02, 0.03, 0.03)):
+        assert 0.5 * nominal <= d < 1.5 * nominal
+
+
+# ---------------------------------------------------------------------------
+# Graceful degradation: plan fallback under fault pressure / energy budget
+# ---------------------------------------------------------------------------
+
+def test_degrade_policy_triggers():
+    p = DegradePolicy(fault_window=4, fault_threshold=2)
+    p.record_fault()
+    assert not p.should_degrade()
+    p.record_fault()
+    assert p.should_degrade()
+    p.reset()
+    assert not p.should_degrade()
+    # old faults age out of the window
+    p2 = DegradePolicy(fault_window=2, fault_threshold=2)
+    p2.record_fault()
+    p2.record_dispatch()
+    p2.record_fault()
+    assert not p2.should_degrade()
+    # energy budget trigger
+    p3 = DegradePolicy(energy_budget_pj=100.0)
+    p3.record_dispatch(60.0)
+    assert not p3.should_degrade()
+    p3.record_dispatch(60.0)
+    assert p3.should_degrade()
+    with pytest.raises(ValueError):
+        DegradePolicy(fault_window=0)
+    with pytest.raises(ValueError):
+        DegradePolicy(energy_budget_pj=-1.0)
+
+
+@pytest.fixture(scope="module")
+def compiled_pair():
+    from repro import api
+
+    cfg, params = _lm_setup()
+    cfg4 = dataclasses.replace(cfg, quant=PAPER_CONFIGS["w1a4"])
+    primary = api.build(cfg, params=params).compile(batch_hints=(1, 4),
+                                                    prompt_len=8)
+    fallback = api.build(cfg4, params=params).compile(batch_hints=(1, 4),
+                                                      prompt_len=8)
+    prompts = [np.random.RandomState(i).randint(0, VOCAB, size=(8,))
+               .astype(np.int32) for i in range(4)]
+    return primary, fallback, prompts
+
+
+def test_degrade_swaps_to_fallback_plan(compiled_pair, tmp_path):
+    """Two prefill kills trip the policy; the engine swaps to the w1a4
+    fallback plan, retries with a FRESH budget, and completes with no dead
+    letters — outputs bit-identical to the fallback plan served fault-free
+    (the accuracy-for-progress trade, executed)."""
+    from repro.resilience import ResilienceConfig
+
+    primary, fallback, prompts = compiled_pair
+    ref_dep = fallback.serve(resilience=ResilienceConfig(),
+                             new_tokens=NEW_TOKENS, max_batch=4)
+    ref = [r.value for r in ref_dep.engine.serve(prompts)]
+
+    dep = primary.serve(resilience=ResilienceConfig(
+        fault_plan=FaultPlan.scripted([("prefill", 0, "power_loss"),
+                                       ("prefill", 1, "power_loss")]),
+        checkpoint_dir=str(tmp_path), epoch_steps=2,
+        degrade=DegradePolicy(fault_window=4, fault_threshold=2)),
+        fallback=fallback, new_tokens=NEW_TOKENS, max_batch=4)
+    eng = dep.engine
+    res = eng.serve(prompts)
+    assert eng.stats["degrades"] == 1
+    assert not eng.dead_letters
+    assert all(v == 1 for v in eng.result_runner.values())
+    for r, v in zip(res, ref):
+        np.testing.assert_array_equal(r.value, v)
+
+
+def test_energy_budget_degrades_between_batches(compiled_pair, tmp_path):
+    """No faults at all: a tiny modeled energy budget alone forces the
+    fallback for the SECOND batch (result_runner records who served what),
+    exercising plan_energy_pj as the budget currency."""
+    from repro.core.plan import plan_energy_pj
+    from repro.resilience import ResilienceConfig
+
+    primary, fallback, prompts = compiled_pair
+    e = plan_energy_pj(primary.plan)
+    assert e > 0 and plan_energy_pj(fallback.plan) < e
+    dep = primary.serve(resilience=ResilienceConfig(
+        checkpoint_dir=str(tmp_path), epoch_steps=2,
+        degrade=DegradePolicy(energy_budget_pj=e)),  # first dispatch spends
+        fallback=fallback, new_tokens=NEW_TOKENS, max_batch=4)
+    eng = dep.engine
+    first = eng.serve(prompts)
+    assert eng.stats["degrades"] == 1
+    second = eng.serve(prompts)
+    by_runner = {r.rid: eng.result_runner[r.rid] for r in first + second}
+    assert set(by_runner.values()) == {0, 1}
+    assert all(eng.result_runner[r.rid] == 1 for r in second)
+
+
+# ---------------------------------------------------------------------------
+# Facade: api serve(resilience=...) wiring
+# ---------------------------------------------------------------------------
+
+def test_api_serve_resilience_roundtrip(compiled_pair, tmp_path):
+    from repro.resilience import ResilienceConfig
+
+    primary, _, prompts = compiled_pair
+    ref = [r.value
+           for r in primary.serve(resilience=ResilienceConfig(),
+                                  new_tokens=NEW_TOKENS,
+                                  max_batch=4).engine.serve(prompts)]
+    dep = primary.serve(resilience=ResilienceConfig(
+        fault_plan=FaultPlan.scripted([("decode", 2, "power_loss")]),
+        checkpoint_dir=str(tmp_path), epoch_steps=2),
+        new_tokens=NEW_TOKENS, max_batch=4)
+    assert isinstance(dep.engine, ResilientServeEngine)
+    res = dep.engine.serve(prompts)
+    assert dep.engine.stats["resumes"] == 1
+    for r, v in zip(res, ref):
+        np.testing.assert_array_equal(r.value, v)
+
+
+def test_exception_types():
+    ev_args = ("power_loss", "decode", 1.0, 0.5, 0)
+    from repro.resilience import FaultEvent
+
+    with pytest.raises(PowerLoss):
+        FaultPlan.raise_for(FaultEvent(*ev_args))
+    with pytest.raises(DeviceDrop):
+        FaultPlan.raise_for(FaultEvent("device_drop", "decode", 1.0, 0.5, 0))
+    # latency/corruption kinds are handled in place, never raised
+    FaultPlan.raise_for(FaultEvent("slow_dispatch", "decode", 1.0, 0.5, 0))
