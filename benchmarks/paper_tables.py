@@ -9,7 +9,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 
 def _time(fn, *args, n=3, **kw):

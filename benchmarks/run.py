@@ -67,9 +67,9 @@ def main() -> None:
             all_rows[name] = rows
             derived = json.dumps(rows[:3] if isinstance(rows, list) else rows)
             print(f"{name},{us:.0f},{derived}")
-        except Exception as e:  # keep the harness running
+        except Exception as e:  # repro-lint: disable=RL003 — recorded in the failure list; --strict exits nonzero on it
             print(f"{name},0,ERROR:{e}")
-            failed.append(name)
+            failed.append(f"{name} ({type(e).__name__}: {e})")
     # roofline table (if dry-run results exist)
     try:
         import roofline
@@ -81,7 +81,7 @@ def main() -> None:
             ok = [r for r in rows if r.get("ok")]
             fr = sorted(ok, key=lambda r: -r["frac"])[:3]
             print(f"roofline,{len(rows)},{json.dumps([dict(arch=r['arch'], shape=r['shape'], frac=round(r['frac'], 3)) for r in fr])}")
-    except Exception as e:
+    except Exception as e:  # repro-lint: disable=RL003 — optional table; the error is printed in the CSV row
         print(f"roofline,0,ERROR:{e}")
     out = "results/bench_rows.json"
     os.makedirs("results", exist_ok=True)

@@ -10,7 +10,6 @@ import argparse
 import dataclasses
 import sys
 
-import jax
 import jax.numpy as jnp
 
 from repro.configs import SINGLE, get_config

@@ -1,0 +1,30 @@
+"""Static verification: plan prover + repro-lint (DESIGN.md §12).
+
+Two entry points, also exposed as ``python -m repro.analysis``:
+
+* :func:`verify_plan` / :func:`verify_plan_file` — interval/bit-range
+  abstract interpretation over a compiled :class:`~repro.core.plan.ModelPlan`
+  (PV101–PV107), run by default inside ``compile_model``/``compile_lm``.
+* :func:`lint_paths` — the RL001–RL005 AST rule engine.
+
+The lint half is import-light (stdlib ``ast`` only) so it runs in
+environments without jax; the prover half imports the plan IR lazily.
+"""
+from repro.analysis.lint import (RULES, LintViolation, lint_file,  # noqa: F401
+                                 lint_paths, lint_source)
+
+
+def __getattr__(name):
+    # prover symbols resolve lazily so `import repro.analysis` (and the
+    # lint CLI) never pays the jax import
+    if name in ("verify_plan", "verify_plan_file", "assert_plan_verified",
+                "PlanVerificationError", "Violation"):
+        from repro.analysis import prover
+
+        return getattr(prover, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+__all__ = ["RULES", "LintViolation", "lint_file", "lint_paths",
+           "lint_source", "verify_plan", "verify_plan_file",
+           "assert_plan_verified", "PlanVerificationError", "Violation"]

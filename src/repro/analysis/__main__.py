@@ -1,0 +1,110 @@
+"""CLI for the static verification subsystem (DESIGN.md §12).
+
+  python -m repro.analysis lint [paths...]          # RL001–RL005 AST rules
+  python -m repro.analysis lint --list-rules
+  python -m repro.analysis check-plan <plan.json>...  # PV101–PV107 prover
+  python -m repro.analysis check-plan --golden      # compile + verify the
+                                                    # golden svhn/alexnet/LM
+                                                    # plans in-process
+
+Both subcommands exit nonzero on any violation — the CI ``analysis`` lane
+gates on them.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import tempfile
+
+
+def _cmd_lint(args) -> int:
+    from repro.analysis.lint import RULES, lint_paths
+
+    if args.list_rules:
+        for rule, desc in sorted(RULES.items()):
+            print(f"{rule}  {desc}")
+        return 0
+    paths = args.paths or ["src"]
+    violations = lint_paths(paths)
+    for v in violations:
+        print(v)
+    n = len(violations)
+    print(f"repro-lint: {n} violation(s) in {', '.join(paths)}"
+          if n else f"repro-lint: clean ({', '.join(paths)})")
+    return 1 if n else 0
+
+
+def _golden_plans(tmp: str):
+    """Compile the golden plans (structure-only CNNs + a smoke LM), save
+    each, and yield (name, artifact base path) — mirrors the tier-1 golden
+    dispatch/bit-identity setups so CI verifies exactly what tests pin."""
+    import dataclasses
+
+    import jax
+
+    from repro.configs import SINGLE, all_configs
+    from repro.configs.paper_cnn import ALEXNET_SPEC, SVHN_SPEC
+    from repro.core.plan import compile_lm, compile_model, save_plan
+    from repro.core.quant import W1A4, W1A8
+    from repro.models import transformer as T
+
+    for name, spec, img, quant in (("svhn", SVHN_SPEC, 40, W1A4),
+                                   ("alexnet", ALEXNET_SPEC, 112, W1A8)):
+        plan = compile_model(None, spec, quant, backend="cpu",
+                             batch_hints=(1, 8), img_hw=img, model=name)
+        yield name, save_plan(plan, f"{tmp}/{name}")
+    cfg = dataclasses.replace(
+        all_configs()["smollm-360m"].smoke(
+            n_layers=2, d_model=64, n_heads=2, n_kv_heads=1, d_ff=128,
+            vocab=64, head_dim=32),
+        quant=dataclasses.replace(W1A8, engine="auto"))
+    params, _ = T.init_lm(jax.random.PRNGKey(0), cfg, SINGLE)
+    plan = compile_lm(params, cfg, backend="cpu", batch_hints=(2,),
+                      prompt_len=8)
+    yield "lm-smoke", save_plan(plan, f"{tmp}/lm_smoke")
+
+
+def _cmd_check_plan(args) -> int:
+    from repro.analysis.prover import verify_plan_file
+
+    targets: list[tuple[str, str]] = [(p, p) for p in args.plans]
+    fails = 0
+    with tempfile.TemporaryDirectory() as tmp:
+        if args.golden:
+            targets.extend(_golden_plans(tmp))
+        if not targets:
+            print("check-plan: no plans given (pass paths or --golden)",
+                  file=sys.stderr)
+            return 2
+        for name, path in targets:
+            violations = verify_plan_file(path, args.target)
+            for v in violations:
+                print(f"{name}: {v}")
+            status = f"{len(violations)} violation(s)" if violations else "OK"
+            print(f"check-plan {name}: {status}")
+            fails += bool(violations)
+    return 1 if fails else 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.analysis")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    lint = sub.add_parser("lint", help="run the RL001–RL005 AST rules")
+    lint.add_argument("paths", nargs="*", help="files/dirs (default: src)")
+    lint.add_argument("--list-rules", action="store_true")
+    lint.set_defaults(fn=_cmd_lint)
+    chk = sub.add_parser("check-plan",
+                         help="verify serialized plan artifacts (PV101–107)")
+    chk.add_argument("plans", nargs="*", help="plan .json paths")
+    chk.add_argument("--golden", action="store_true",
+                     help="compile + verify the golden svhn/alexnet/LM plans")
+    chk.add_argument("--target", default=None,
+                     help="override the backend the proofs are stated "
+                          "against (default: each plan's own)")
+    chk.set_defaults(fn=_cmd_check_plan)
+    args = ap.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,337 @@
+"""repro-lint: an AST rule engine for repo-specific invariants.
+
+Rules ruff cannot express because they encode *this* codebase's contracts
+(DESIGN.md §12):
+
+* **RL001** — no wall-clock/ambient randomness in ``src/repro/resilience/``
+  (the fault-clock code): ``time.time``/``time_ns``, stdlib ``random``,
+  ``datetime.now`` and unseeded ``np.random`` calls all break the
+  determinism contract that chaos is a pure function of
+  (seed, mtbf, submit order) on the logical work clock.
+* **RL002** — no host syncs on traced values in ``src/repro``:
+  ``float(jnp...)`` / ``int(jnp...)``, ``.item()``, ``np.asarray(jnp...)``
+  force a device round trip; inside jitted serve dataflow they either
+  fail to trace or silently serialize the pipeline.
+* **RL003** — no broad ``except Exception``/``BaseException``/bare
+  ``except`` that swallows without a ``raise``.  A non-raising handler
+  must either narrow the exception type or record the failure and carry an
+  inline suppression stating why swallowing is the contract.
+* **RL004** — every ``pl.pallas_call`` with a literal ``grid=`` tuple must
+  give each ``pl.BlockSpec`` index-map lambda exactly ``len(grid)``
+  parameters, returning a tuple of the block-shape's rank (a mismatched
+  arity fails at trace time on TPU only — off-TPU interpret mode can mask
+  it).
+* **RL005** — engine-private state (underscore attributes of a
+  non-``self`` object) is mutated only by its owner in
+  ``launch/engine.py`` / ``resilience/engine.py``: the engines are
+  single-threaded by contract and external writes to ``engine._pending``
+  et al. bypass the accounting that the resilience checkpoints replay.
+
+Suppression: append ``# repro-lint: disable=RL00X`` (comma list allowed)
+to the offending line; ``# repro-lint: disable-file=RL00X`` in the first
+ten lines silences a rule for the whole file.  Every suppression should
+say why.  CLI: ``python -m repro.analysis lint [paths...]``.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+import re
+
+RULES = {
+    "RL001": "no wall-clock / ambient randomness in resilience fault-clock code",
+    "RL002": "no host sync (float()/int()/.item()/np.asarray) on traced jnp values",
+    "RL003": "no broad except that swallows without re-raise or recorded reason",
+    "RL004": "pallas_call grid / BlockSpec index-map arity consistency",
+    "RL005": "engine-private state mutated only by its owning engine",
+}
+
+# matched anywhere after a '#' on the line, so the pragma can ride along
+# other tags ('# noqa: BLE001  repro-lint: disable=RL003 — why')
+_SUPPRESS_LINE = re.compile(r"#.*repro-lint:\s*disable=([A-Za-z0-9_,]+)")
+_SUPPRESS_FILE = re.compile(r"#.*repro-lint:\s*disable-file=([A-Za-z0-9_,]+)")
+
+# RL001 allow-list: explicitly seeded constructors (call must pass a seed
+# argument — checked at the call site).
+_SEEDED_CTORS = {"RandomState", "default_rng", "Generator", "PRNGKey"}
+
+# RL005: container methods that mutate their receiver.
+_MUTATORS = {"append", "appendleft", "extend", "update", "insert", "add",
+             "remove", "discard", "pop", "popleft", "popitem", "clear",
+             "setdefault"}
+
+
+@dataclasses.dataclass(frozen=True)
+class LintViolation:
+    path: str
+    line: int
+    col: int
+    rule: str
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}:{self.col} {self.rule} {self.message}"
+
+
+def _dotted(node) -> str | None:
+    """'a.b.c' for a Name/Attribute chain, else None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _mentions_jnp(node) -> bool:
+    return any(isinstance(n, ast.Name) and n.id == "jnp"
+               for n in ast.walk(node))
+
+
+# ---------------------------------------------------------------------------
+# Rule checkers: (tree, rel) -> iterator of (node, message)
+# ---------------------------------------------------------------------------
+
+def _rl001(tree, rel):
+    if not rel.startswith("src/repro/resilience/"):
+        return
+    banned_calls = {"time.time", "time.time_ns", "time.monotonic",
+                    "datetime.now", "datetime.utcnow",
+                    "datetime.datetime.now", "datetime.datetime.utcnow"}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.Import, ast.ImportFrom)):
+            mod = getattr(node, "module", None)
+            names = [a.name for a in node.names]
+            if mod == "random" or "random" in names:
+                yield node, ("stdlib random imported — fault schedules "
+                             "must come from a seeded np.random.RandomState")
+        if not isinstance(node, ast.Call):
+            continue
+        name = _dotted(node.func)
+        if name is None:
+            continue
+        if name in banned_calls:
+            yield node, (f"{name}() breaks the determinism contract: "
+                         "chaos is a pure function of (seed, mtbf, submit "
+                         "order) on the logical work clock")
+        elif name.startswith("random."):
+            yield node, (f"{name}() draws from ambient stdlib RNG state — "
+                         "use the seeded fault-plan RandomState")
+        elif (name.startswith(("np.random.", "numpy.random."))):
+            leaf = name.rsplit(".", 1)[1]
+            if leaf not in _SEEDED_CTORS:
+                yield node, (f"{name}() uses the global numpy RNG — "
+                             "construct a seeded RandomState instead")
+            elif not (node.args or node.keywords):
+                yield node, (f"{name}() without a seed argument is "
+                             "entropy-seeded — pass the fault-plan seed")
+
+
+def _rl002(tree, rel):
+    if not rel.startswith("src/repro/"):
+        return
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        if (isinstance(node.func, ast.Name)
+                and node.func.id in ("float", "int", "bool")
+                and node.args and _mentions_jnp(node.args[0])):
+            yield node, (f"{node.func.id}() on a jnp expression is a host "
+                         "sync — inside jit it fails to trace; outside it "
+                         "serializes the pipeline.  Keep the value traced "
+                         "or suppress if provably pre-jit")
+        name = _dotted(node.func)
+        if (name in ("np.asarray", "np.array", "numpy.asarray",
+                     "numpy.array")
+                and node.args and _mentions_jnp(node.args[0])):
+            yield node, ("np.asarray on a jnp expression forces a device "
+                         "round trip — keep serve dataflow traced")
+        if (isinstance(node.func, ast.Attribute)
+                and node.func.attr == "item" and not node.args
+                and not node.keywords):
+            yield node, (".item() is a host sync — keep the value traced "
+                         "or suppress if provably pre-jit")
+
+
+def _broad_handler(handler) -> bool:
+    t = handler.type
+    if t is None:
+        return True
+    names = [_dotted(e) for e in t.elts] if isinstance(t, ast.Tuple) \
+        else [_dotted(t)]
+    return any(n in ("Exception", "BaseException") for n in names)
+
+
+def _rl003(tree, rel):
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.ExceptHandler) or not _broad_handler(node):
+            continue
+        if any(isinstance(n, ast.Raise)
+               for stmt in node.body for n in ast.walk(stmt)):
+            continue
+        yield node, ("broad except swallows without re-raise — narrow the "
+                     "exception type, re-raise, or record the failure and "
+                     "suppress with the reason")
+
+
+def _rl004(tree, rel):
+    if not rel.startswith("src/"):
+        return
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = _dotted(node.func)
+        if name is None or not name.endswith("pallas_call"):
+            continue
+        kwargs = {kw.arg: kw.value for kw in node.keywords if kw.arg}
+        grid = kwargs.get("grid")
+        if grid is None:
+            continue
+        if isinstance(grid, ast.Tuple):
+            g = len(grid.elts)
+        elif isinstance(grid, ast.Constant) and isinstance(grid.value, int):
+            g = 1
+        else:
+            continue  # computed grid: not statically decidable
+        for spec_kw in ("in_specs", "out_specs"):
+            holder = kwargs.get(spec_kw)
+            if holder is None:
+                continue
+            for spec in ast.walk(holder):
+                if not (isinstance(spec, ast.Call)
+                        and (_dotted(spec.func) or "").endswith("BlockSpec")):
+                    continue
+                skw = {kw.arg: kw.value for kw in spec.keywords if kw.arg}
+                shape = spec.args[0] if spec.args else skw.get("block_shape")
+                imap = (spec.args[1] if len(spec.args) > 1
+                        else skw.get("index_map"))
+                if not isinstance(imap, ast.Lambda):
+                    continue
+                la = imap.args
+                if la.vararg or la.kwarg:
+                    continue
+                arity = len(la.args) + len(la.posonlyargs)
+                if arity != g:
+                    yield spec, (f"BlockSpec index map takes {arity} "
+                                 f"argument(s) but the pallas_call grid "
+                                 f"has rank {g} — trace-time failure on "
+                                 "TPU")
+                elif (isinstance(imap.body, ast.Tuple)
+                        and isinstance(shape, ast.Tuple)
+                        and len(imap.body.elts) != len(shape.elts)):
+                    yield spec, (f"BlockSpec index map returns "
+                                 f"{len(imap.body.elts)} coordinate(s) for "
+                                 f"a rank-{len(shape.elts)} block shape")
+
+
+def _rl005(tree, rel):
+    if rel not in ("src/repro/launch/engine.py",
+                   "src/repro/resilience/engine.py"):
+        return
+    msg = ("mutates engine-private state outside the owning engine — the "
+           "single-threaded ownership contract (DESIGN.md §7/§11) keeps "
+           "checkpoint replay consistent; route through an engine method")
+
+    def _foreign_private(attr_node) -> bool:
+        """True for `<non-self>._name`."""
+        return (isinstance(attr_node, ast.Attribute)
+                and attr_node.attr.startswith("_")
+                and not attr_node.attr.startswith("__")
+                and not (isinstance(attr_node.value, ast.Name)
+                         and attr_node.value.id in ("self", "cls")))
+
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.Assign, ast.AugAssign, ast.Delete)):
+            targets = (node.targets if isinstance(node, ast.Assign)
+                       else [node.target] if isinstance(node, ast.AugAssign)
+                       else node.targets)
+            for t in targets:
+                base = t.value if isinstance(t, ast.Subscript) else t
+                if _foreign_private(base):
+                    yield node, msg
+        elif (isinstance(node, ast.Call)
+              and isinstance(node.func, ast.Attribute)
+              and node.func.attr in _MUTATORS
+              and _foreign_private(node.func.value)):
+            yield node, msg
+
+
+_CHECKERS = {"RL001": _rl001, "RL002": _rl002, "RL003": _rl003,
+             "RL004": _rl004, "RL005": _rl005}
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+def _parse_suppressions(source: str):
+    """(file-level set, {line: set}) of disabled rule IDs."""
+    per_line: dict[int, set] = {}
+    file_level: set = set()
+    for i, text in enumerate(source.splitlines(), start=1):
+        m = _SUPPRESS_LINE.search(text)
+        if m:
+            per_line[i] = {r.strip() for r in m.group(1).split(",")
+                           if r.strip()}
+        m = _SUPPRESS_FILE.search(text)
+        if m and i <= 10:
+            file_level |= {r.strip() for r in m.group(1).split(",")
+                           if r.strip()}
+    return file_level, per_line
+
+
+def lint_source(source: str, rel: str, path: str | None = None
+                ) -> list[LintViolation]:
+    """Lint one file's source.  ``rel`` is the repo-relative posix path the
+    rule scoping keys on; ``path`` is what violations display."""
+    path = path or rel
+    try:
+        tree = ast.parse(source)
+    except SyntaxError as e:
+        return [LintViolation(path, e.lineno or 0, e.offset or 0, "RL000",
+                              f"syntax error: {e.msg}")]
+    file_sup, line_sup = _parse_suppressions(source)
+    out = []
+    for rule, checker in sorted(_CHECKERS.items()):
+        if rule in file_sup:
+            continue
+        for node, message in checker(tree, rel):
+            line = getattr(node, "lineno", 0)
+            if rule in line_sup.get(line, ()):
+                continue
+            out.append(LintViolation(path, line,
+                                     getattr(node, "col_offset", 0) + 1,
+                                     rule, message))
+    return sorted(out, key=lambda v: (v.path, v.line, v.col, v.rule))
+
+
+def lint_file(path: str, root: str | None = None) -> list[LintViolation]:
+    root = root or os.getcwd()
+    rel = os.path.relpath(os.path.abspath(path), root).replace(os.sep, "/")
+    with open(path, encoding="utf-8") as f:
+        source = f.read()
+    return lint_source(source, rel, path)
+
+
+def iter_py_files(paths):
+    for p in paths:
+        if os.path.isfile(p):
+            if p.endswith(".py"):
+                yield p
+        else:
+            for dirpath, dirnames, filenames in os.walk(p):
+                dirnames[:] = sorted(d for d in dirnames
+                                     if not d.startswith((".", "__pycache__")))
+                for fn in sorted(filenames):
+                    if fn.endswith(".py"):
+                        yield os.path.join(dirpath, fn)
+
+
+def lint_paths(paths, root: str | None = None) -> list[LintViolation]:
+    out = []
+    for path in iter_py_files(paths):
+        out.extend(lint_file(path, root))
+    return out

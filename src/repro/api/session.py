@@ -137,7 +137,8 @@ class Model:
 
     def compile(self, *, target: str | None = None, batch_hints=(1,),
                 autotune: bool = False, prompt_len: int = 16,
-                cache: str | None = None) -> "CompiledModel":
+                cache: str | None = None,
+                verify: bool = True) -> "CompiledModel":
         """Compile this model against a compute target.
 
         ``target`` names a registered compute target (``cpu``/``tpu``);
@@ -145,7 +146,9 @@ class Model:
         if present it is reloaded (guarded by
         :func:`repro.core.plan.check_plan_matches` — requantization and
         autotune are skipped), otherwise the freshly compiled plan is
-        saved there.
+        saved there.  ``verify`` gates the static plan prover
+        (:func:`repro.analysis.verify_plan`) on both the fresh-compile and
+        the cache-reload path.
         """
         from repro.core import plan as P
 
@@ -169,18 +172,23 @@ class Model:
             plan = P.check_plan_matches(
                 P.load_plan(cache), quant=self.quant, model=self.name,
                 backend=backend or jax.default_backend())
+            if verify:
+                from repro.analysis.prover import assert_plan_verified
+
+                assert_plan_verified(plan)
             return CompiledModel(plan, model=self, cache_path=cache,
                                  reloaded=True,
                                  compile_s=time.perf_counter() - t0)
         if self.kind == "lm":
             plan = P.compile_lm(self.params, self.spec, backend=backend,
                                 batch_hints=batch_hints,
-                                prompt_len=prompt_len, autotune=autotune)
+                                prompt_len=prompt_len, autotune=autotune,
+                                verify=verify)
         else:
             plan = P.compile_model(self.params, self.spec, self.quant,
                                    backend=backend, batch_hints=batch_hints,
                                    img_hw=self.img_hw, autotune=autotune,
-                                   model=self.name)
+                                   model=self.name, verify=verify)
         path = P.save_plan(plan, cache) if cache else None
         return CompiledModel(plan, model=self, cache_path=path,
                              reloaded=False,

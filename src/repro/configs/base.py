@@ -9,7 +9,6 @@ model layers.
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Any, Optional, Tuple
 
 import jax.numpy as jnp

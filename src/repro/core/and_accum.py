@@ -116,6 +116,9 @@ def bitgemm_f32dot(a_lv: jax.Array, w_lv: jax.Array, a_bits: int, w_bits: int) -
     silently round; HIGHEST precision keeps TPU/GPU matmul units from
     truncating the f32 inputs.
     """
+    # defense-in-depth: plan-dispatched calls arrive with this already
+    # proven statically (repro.analysis prover, PV101) — only direct
+    # un-planned calls can trip it
     if not f32dot_exact(a_lv.shape[-1], a_bits, w_bits):
         raise ValueError(
             f"f32dot engine inexact for a_bits={a_bits}, w_bits={w_bits}, "

@@ -294,13 +294,20 @@ def _is_prequantized(params) -> bool:
 
 def compile_model(params, spec, quant: QuantConfig, *, backend=None,
                   batch_hints=(1,), img_hw=40, autotune: bool = False,
-                  model: str = "cnn") -> ModelPlan:
+                  model: str = "cnn", verify: bool = True) -> ModelPlan:
     """Compile a CNN serve plan: validate/resolve engines for every layer at
     every batch hint, pre-quantize the weights once, collect any autotune
     measurements.  ``params=None`` produces a structure-only plan (engine
     table inspection, golden tests).  Explicit ``quant.engine`` overrides
     that are infeasible on ``backend`` raise :class:`PlanError` here — at
     compile time, naming the layer — instead of failing inside a kernel.
+
+    ``verify=True`` (default) runs the static plan prover
+    (:func:`repro.analysis.verify_plan`, DESIGN.md §12) over the result —
+    bit-range exactness, int32 overflow, feasibility, table and cost
+    invariants — raising :class:`repro.analysis.PlanVerificationError`
+    (a :class:`PlanError`) on any violation.  ``verify=False`` is the
+    escape hatch for deliberately out-of-contract plans.
     """
     backend = backend or jax.default_backend()
     if isinstance(img_hw, int):
@@ -327,9 +334,14 @@ def compile_model(params, spec, quant: QuantConfig, *, backend=None,
                                   lp.stride, lp.padding, batch=b))
                 if key in ops._AUTOTUNE_CACHE:
                     tuned[key] = ops._AUTOTUNE_CACHE[key]
-    return ModelPlan(kind="cnn", model=model, backend=backend, quant=quant,
+    plan = ModelPlan(kind="cnn", model=model, backend=backend, quant=quant,
                      batch_hints=batch_hints, layers=layers,
                      params=serve_params, autotune=tuned)
+    if verify:
+        from repro.analysis.prover import assert_plan_verified
+
+        assert_plan_verified(plan)
+    return plan
 
 
 # Structural layers for the compat path (`cnn_forward(mode="serve")` without
@@ -432,12 +444,16 @@ def plan_forward(plan: ModelPlan, x, params=None):
 # ---------------------------------------------------------------------------
 
 def compile_lm(params, cfg, *, backend=None, batch_hints=(1,),
-               prompt_len: int = 16, autotune: bool = False) -> ModelPlan:
+               prompt_len: int = 16, autotune: bool = False,
+               verify: bool = True) -> ModelPlan:
     """Compile a transformer serve plan: pre-quantize every projection once
     and resolve one engine verdict per distinct (K, N) GEMM shape into the
     plan's dense table (consulted by ``select_engine`` while the plan is
     active).  Verdicts are ``m``-free — one entry covers prefill and every
     decode step (see :func:`repro.kernels.ops.dense_plan_key`).
+
+    ``verify=True`` (default) runs the static plan prover over the result
+    (see :func:`compile_model`); ``verify=False`` bypasses it.
     """
     from repro.models.layers import PREQUANT_KEYS, prequantize_params
 
@@ -497,11 +513,16 @@ def compile_lm(params, cfg, *, backend=None, batch_hints=(1,),
         tuned = {k: v for k, v in ops._AUTOTUNE_CACHE.items()
                  if k[0] == "dense" and any(k[2:4] == (lp.k, lp.cout)
                                             for lp in layers)}
-    return ModelPlan(kind="lm", model=getattr(cfg, "name", "lm"),
+    plan = ModelPlan(kind="lm", model=getattr(cfg, "name", "lm"),
                      backend=backend, quant=quant, batch_hints=batch_hints,
                      layers=tuple(layers), params=serve_params,
                      dense_table=table, attn_table=attn_table,
                      autotune=tuned)
+    if verify:
+        from repro.analysis.prover import assert_plan_verified
+
+        assert_plan_verified(plan)
+    return plan
 
 
 def _plan_lm_attention(params, cfg, quant: QuantConfig, backend: str,

@@ -9,10 +9,9 @@ from __future__ import annotations
 
 import queue
 import threading
-from typing import Any, Callable, Iterator, Optional
+from typing import Any, Callable, Optional
 
 import jax
-import numpy as np
 
 
 class Pipeline:

@@ -12,13 +12,12 @@ with XLA_FLAGS=--xla_force_host_platform_device_count=8).
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 
 def make_pipeline_mesh(stages: int, data: int = 1):

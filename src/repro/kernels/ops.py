@@ -327,6 +327,12 @@ def engine_feasible(engine: str, m: int, k: int, n: int, a_bits: int,
     natively compilable.  Pallas kernels off-TPU only interpret (orders of
     magnitude slow), so they are rejected here even though the permissive
     call-time path still accepts them for correctness testing.
+
+    The mantissa bounds below (implicit off-TPU, f32dot) are the same
+    contracts the static plan prover re-derives by interval analysis
+    (repro.analysis, PV101) — the prover checks every serialized row
+    against this function too (PV103), so a verified plan can never
+    reach the runtime ``ValueError`` guards behind these reasons.
     """
     from repro.api.targets import IMPLICIT_PADDINGS, IMPLICIT_STRIDES, get_target
 

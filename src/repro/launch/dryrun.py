@@ -153,12 +153,14 @@ def main():
                     arch, shape, multi_pod=mp, analysis=args.analysis,
                     infer_plan=args.infer_plan, quant=args.quant,
                     prequant=args.prequant, overrides=overrides or None))
-            except Exception as e:  # a failure here is a bug in the system
+            except Exception as e:  # repro-lint: disable=RL003 — a failure here is a bug: structured-recorded below and the run exits nonzero
                 fails += 1
                 traceback.print_exc()
                 results.append(dict(arch=arch, shape=shape,
                                     mesh="2x16x16" if mp else "16x16",
-                                    ok=False, error=str(e)[-2000:]))
+                                    ok=False, error=str(e)[-2000:],
+                                    error_type=type(e).__name__,
+                                    traceback=traceback.format_exc()[-2000:]))
     if args.out:
         with open(args.out, "w") as f:
             json.dump(results, f, indent=1)

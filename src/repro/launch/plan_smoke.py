@@ -86,16 +86,19 @@ def main() -> int:
     spec, params, x, quant = _setup()
     base = args.out
     reused = False
+    recompile_reason = None
     if os.path.exists(base + ".json") and os.path.exists(
             base + ".expected.npy"):
         try:
             plan = load_plan(base)  # cached artifact from a previous CI run
             reused = True
-        except Exception as e:  # stale format: recompile below
-            print(f"cached plan unusable ({e}); recompiling")
+        except Exception as e:  # repro-lint: disable=RL003 — reason recorded in the output JSON; any reload failure means recompile
+            recompile_reason = f"{type(e).__name__}: {e}"
+            print(f"cached plan unusable ({recompile_reason}); recompiling")
             plan = None
     else:
         plan = None
+        recompile_reason = "no cached artifact"
     if plan is None:
         t0 = time.perf_counter()
         plan = compile_model(params, spec, quant, batch_hints=(1, BATCH),
@@ -132,6 +135,7 @@ def main() -> int:
         return 1
     print(json.dumps(dict(
         plan=base + ".json", reused_cached_artifact=reused,
+        recompile_reason=recompile_reason,
         fingerprint=plan.fingerprint(),
         engines={lp.name: lp.engine for lp in plan.layers})))
     return 0

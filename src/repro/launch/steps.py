@@ -6,7 +6,6 @@ functions that launch/dryrun.py lowers under the production mesh.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

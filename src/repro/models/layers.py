@@ -14,9 +14,8 @@ Conventions
 from __future__ import annotations
 
 import dataclasses
-import functools
 import math
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

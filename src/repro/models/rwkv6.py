@@ -8,7 +8,6 @@ non-GEMM fp dynamics and stay fp.
 """
 from __future__ import annotations
 
-import math
 
 import jax
 import jax.numpy as jnp

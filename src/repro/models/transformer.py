@@ -15,8 +15,7 @@ counts are preserved (e.g. recurrentgemma's 38 = 12x(rec,rec,attn) +
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -8,7 +8,6 @@ restarts the whole current frame sequence (volatile accumulators).
 """
 from __future__ import annotations
 
-import dataclasses
 
 import numpy as np
 

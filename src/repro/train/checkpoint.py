@@ -105,7 +105,7 @@ class Checkpointer:
             def _run():
                 try:
                     _write()
-                except BaseException as e:  # noqa: BLE001 — must not be lost
+                except BaseException as e:  # noqa: BLE001  repro-lint: disable=RL003 — captured into _error; wait()/next save() re-raises
                     self._error = e
 
             self._thread = threading.Thread(target=_run, daemon=True)

@@ -10,7 +10,6 @@ slowest links of the 2x16x16 mesh.
 """
 from __future__ import annotations
 
-from typing import Any
 
 import jax
 import jax.numpy as jnp

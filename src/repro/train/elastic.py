@@ -14,7 +14,7 @@ first result wins at the all-reduce via the standard "first write" rule.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Sequence
+from typing import Any
 
 import jax
 import numpy as np

@@ -17,7 +17,7 @@ asserts.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Iterable, Optional
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp

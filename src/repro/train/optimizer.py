@@ -7,8 +7,6 @@ model x data sharded via the FSDP rule, hence moments are too).
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp

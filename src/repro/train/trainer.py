@@ -12,7 +12,6 @@ import time
 from typing import Any, Callable, Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.distributed import sharding as shd
 from repro.models import transformer as T

@@ -11,7 +11,7 @@ from __future__ import annotations
 import pytest
 
 try:
-    from hypothesis import given, settings, strategies as st
+    from hypothesis import given, settings, strategies as st  # noqa: F401 — re-exported to the test modules
 
     HAVE_HYPOTHESIS = True
 except ImportError:  # stub decorators: collectable, skipped at run time

@@ -1,0 +1,434 @@
+"""Static verification subsystem: plan prover (PV101-PV107) + repro-lint
+(RL001-RL005).
+
+Pins the DESIGN.md §12 contracts: golden plans prove clean, adversarial
+hand-edited plans are rejected with their specific violation IDs, the
+prover subsumes the runtime mantissa guards (same boundary, checked at
+compile time instead of first dispatch), and the lint rules fire/suppress
+exactly as documented.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis.lint import lint_source
+from repro.analysis.prover import (PlanVerificationError, Violation,
+                                   assert_plan_verified, verify_plan,
+                                   verify_plan_file)
+from repro.configs import SINGLE, all_configs
+from repro.configs.paper_cnn import ALEXNET_SPEC, SVHN_SPEC
+from repro.core.and_accum import bitgemm_f32dot, f32dot_exact
+from repro.core.plan import (LayerPlan, PlanError, compile_lm, compile_model,
+                             save_plan)
+from repro.core.quant import W1A4, W1A8
+from repro.kernels.attn_flash import attn_flash_xla, flash_levels_exact
+from repro.models import transformer as T
+
+
+@pytest.fixture(scope="module")
+def svhn_plan():
+    return compile_model(None, SVHN_SPEC, W1A4, backend="cpu",
+                         batch_hints=(1, 8), img_hw=40, model="svhn")
+
+
+@pytest.fixture(scope="module")
+def alexnet_plan():
+    return compile_model(None, ALEXNET_SPEC, W1A8, backend="cpu",
+                         batch_hints=(1, 8), img_hw=112, model="alexnet")
+
+
+@pytest.fixture(scope="module")
+def lm_plan():
+    cfg = dataclasses.replace(
+        all_configs()["smollm-360m"].smoke(
+            n_layers=2, d_model=64, n_heads=2, n_kv_heads=1, d_ff=128,
+            vocab=64, head_dim=32),
+        quant=dataclasses.replace(W1A8, engine="auto"))
+    params, _ = T.init_lm(jax.random.PRNGKey(0), cfg, SINGLE)
+    return compile_lm(params, cfg, backend="cpu", batch_hints=(2,),
+                      prompt_len=8)
+
+
+def _conv_row(k, engine, a_bits=8, w_bits=8):
+    """A synthetic quantized conv row with consistent GEMM geometry."""
+    return LayerPlan(
+        index=0, name="adv", op="conv", role="mid", fp=False, kh=1, kw=1,
+        stride=1, padding="SAME", cin=k, cout=16, in_h=8, in_w=8, out_h=8,
+        out_w=8, k=k, a_bits=a_bits, w_bits=w_bits, engine=engine,
+        engine_source="override", engines=((1, engine), (8, engine)),
+        cost=(1.0, 1.0, 1.0))
+
+
+def _attn_row(head_dim, engine="flash"):
+    return LayerPlan(
+        index=0, name="adv_attn", op="attn", role="mid", fp=False, kh=0,
+        kw=0, stride=1, padding="", cin=0, cout=0, in_h=0, in_w=0, out_h=0,
+        out_w=0, k=head_dim, a_bits=8, w_bits=8, engine=engine,
+        engine_source="override", engines=((1, engine), (8, engine)),
+        cost=(1.0, 1.0, 1.0), attn_engine=engine)
+
+
+def _rules(violations):
+    return {v.rule for v in violations}
+
+
+# ---------------------------------------------------------------------------
+# Golden plans prove clean
+# ---------------------------------------------------------------------------
+
+def test_golden_svhn_verifies_clean(svhn_plan):
+    assert verify_plan(svhn_plan) == []
+
+
+def test_golden_alexnet_verifies_clean(alexnet_plan):
+    assert verify_plan(alexnet_plan) == []
+
+
+def test_golden_lm_verifies_clean(lm_plan):
+    assert verify_plan(lm_plan) == []
+
+
+def test_verify_plan_file_clean_on_saved_artifact(svhn_plan, tmp_path):
+    base = save_plan(svhn_plan, str(tmp_path / "svhn"))
+    assert verify_plan_file(base) == []
+
+
+def test_verify_plan_file_clean_on_saved_lm(lm_plan, tmp_path):
+    base = save_plan(lm_plan, str(tmp_path / "lm"))
+    assert verify_plan_file(base) == []
+
+
+# ---------------------------------------------------------------------------
+# Adversarial plans MUST fail with their specific IDs
+# ---------------------------------------------------------------------------
+
+def test_mantissa_overflow_bits_rejected_pv101(svhn_plan):
+    """16x16-bit f32dot at K=180 blows the fp32 mantissa: PV101 (and the
+    engine_feasible re-check PV103 on the same row)."""
+    bad = dataclasses.replace(
+        svhn_plan, layers=(_conv_row(180, "f32dot", a_bits=16, w_bits=16),))
+    rules = _rules(verify_plan(bad))
+    assert "PV101" in rules and "PV103" in rules
+
+
+def test_int32_accumulator_overflow_rejected_pv102(svhn_plan):
+    bad = dataclasses.replace(
+        svhn_plan, layers=(_conv_row(64, "int8", a_bits=20, w_bits=20),))
+    assert "PV102" in _rules(verify_plan(bad))
+
+
+def test_infeasible_engine_row_rejected_pv103(svhn_plan):
+    """A hand-edited row pinning the Pallas 'fused' engine on a cpu plan is
+    infeasible (off-TPU Pallas only interprets)."""
+    violations = verify_plan(
+        dataclasses.replace(svhn_plan, layers=(_conv_row(64, "fused"),)))
+    assert any(v.rule == "PV103" and "fused" in v.message
+               for v in violations)
+
+
+def test_missing_attn_table_row_rejected_pv104(lm_plan):
+    bad = dataclasses.replace(lm_plan, attn_table={})
+    violations = verify_plan(bad)
+    assert any(v.rule == "PV104" and "attn_table" in v.where
+               for v in violations)
+
+
+def test_orphan_dense_table_entry_rejected_pv104(lm_plan):
+    table = dict(lm_plan.dense_table)
+    table[("dense", 999, 999, 8, 1, "cpu")] = "planes"
+    violations = verify_plan(dataclasses.replace(lm_plan,
+                                                 dense_table=table))
+    assert any(v.rule == "PV104" and "orphan" in v.message
+               for v in violations)
+
+
+def test_corrupted_cost_annotation_rejected_pv105(svhn_plan):
+    row = dataclasses.replace(svhn_plan.layers[0],
+                              cost=(-1.0, 10.0, 10.0))
+    bad = dataclasses.replace(svhn_plan,
+                              layers=(row,) + svhn_plan.layers[1:])
+    assert any(v.rule == "PV105" and "energy_pj=-1.0" in v.message
+               for v in verify_plan(bad))
+
+
+def test_version_drift_rejected_pv107(svhn_plan):
+    bad = dataclasses.replace(svhn_plan, version=99)
+    assert "PV107" in _rules(verify_plan(bad))
+
+
+def test_duplicate_batch_hints_rejected_pv107(svhn_plan):
+    bad = dataclasses.replace(svhn_plan, batch_hints=(1, 1))
+    assert "PV107" in _rules(verify_plan(bad))
+
+
+def test_hand_edited_artifact_rejected_on_disk_pv106(svhn_plan, tmp_path):
+    """A hand-edited .json artifact no longer matches the reloaded plan's
+    re-serialization — verify_plan_file reports PV106 even when the edit is
+    semantically invisible to load_plan."""
+    path = save_plan(svhn_plan, str(tmp_path / "edited"))
+    with open(path) as f:
+        meta = json.load(f)
+    meta["zzz_hand_edit"] = True
+    with open(path, "w") as f:
+        json.dump(meta, f)
+    assert "PV106" in _rules(verify_plan_file(path))
+
+
+def test_assert_plan_verified_raises_plan_error(svhn_plan):
+    bad = dataclasses.replace(
+        svhn_plan, layers=(_conv_row(180, "f32dot", a_bits=16, w_bits=16),))
+    with pytest.raises(PlanVerificationError) as ei:
+        assert_plan_verified(bad)
+    assert isinstance(ei.value, PlanError)  # existing handlers catch it
+    assert "verify=False" in str(ei.value)
+    assert all(isinstance(v, Violation) for v in ei.value.violations)
+
+
+# ---------------------------------------------------------------------------
+# The prover subsumes the runtime mantissa guards (same boundary, earlier)
+# ---------------------------------------------------------------------------
+
+def test_prover_subsumes_f32dot_guard(svhn_plan):
+    """At 8x8 bits the f32dot bound flips between K=258 and K=259; the
+    prover rejects exactly where the bitgemm_f32dot runtime guard raises."""
+    assert f32dot_exact(258, 8, 8) and not f32dot_exact(259, 8, 8)
+    for k in (258, 259):
+        plan = dataclasses.replace(svhn_plan,
+                                   layers=(_conv_row(k, "f32dot"),))
+        has_pv101 = "PV101" in _rules(verify_plan(plan))
+        assert has_pv101 == (not f32dot_exact(k, 8, 8))
+    # runtime guard agrees at the same boundary — but only fires at dispatch
+    a = jnp.ones((1, 259), jnp.float32)
+    w = jnp.ones((259, 4), jnp.float32)
+    with pytest.raises(ValueError, match="f32dot engine inexact"):
+        bitgemm_f32dot(a, w, 8, 8)
+    assert bitgemm_f32dot(a[:, :258], w[:258], 8, 8).shape == (1, 4)
+
+
+def test_prover_subsumes_flash_guard(svhn_plan):
+    """flash_levels_exact flips at head_dim 1024 (8/8 bits); the prover
+    flags PV101 exactly there, before attn_flash_xla's ValueError could."""
+    assert flash_levels_exact(1023, 8, 8) and not flash_levels_exact(
+        1024, 8, 8)
+    for hd in (1023, 1024):
+        plan = dataclasses.replace(svhn_plan, layers=(_attn_row(hd),))
+        has_pv101 = "PV101" in _rules(verify_plan(plan))
+        assert has_pv101 == (not flash_levels_exact(hd, 8, 8))
+    q = jnp.zeros((1, 4, 1, 1024), jnp.float32)
+    with pytest.raises(ValueError, match="head_dim"):
+        attn_flash_xla(q, q, q)
+
+
+def test_prover_subsumes_implicit_group_bound(svhn_plan):
+    """Off-TPU implicit groups at 4-bit nibbles: 15*15*K < 2^24 fails past
+    K=74565 — the same bound engine_feasible states as a reason string."""
+    plan = dataclasses.replace(svhn_plan,
+                               layers=(_conv_row(80000, "implicit"),))
+    assert "PV101" in _rules(verify_plan(plan))
+
+
+# ---------------------------------------------------------------------------
+# Escape hatch + compile wiring
+# ---------------------------------------------------------------------------
+
+def test_compile_model_verify_escape_hatch(monkeypatch):
+    """verify=True (default) routes through assert_plan_verified and
+    surfaces prover rejections as PlanVerificationError; verify=False
+    bypasses the prover entirely."""
+    from repro.analysis import prover
+
+    boom = [Violation("PV999", "test", "injected failure")]
+    monkeypatch.setattr(prover, "verify_plan", lambda plan, target=None: boom)
+    with pytest.raises(PlanVerificationError, match="PV999"):
+        compile_model(None, SVHN_SPEC, W1A4, backend="cpu",
+                      batch_hints=(1,), img_hw=40, model="svhn")
+    plan = compile_model(None, SVHN_SPEC, W1A4, backend="cpu",
+                         batch_hints=(1,), img_hw=40, model="svhn",
+                         verify=False)
+    assert plan.layers  # compiled fine with the prover bypassed
+
+
+# ---------------------------------------------------------------------------
+# repro-lint rules (fixture sources through lint_source)
+# ---------------------------------------------------------------------------
+
+def _lint(src, rel):
+    return lint_source(textwrap.dedent(src), rel)
+
+
+def _lint_rules(src, rel):
+    return {v.rule for v in _lint(src, rel)}
+
+
+def test_rl001_wall_clock_in_resilience_only():
+    src = """\
+    import time
+    def now():
+        return time.time()
+    """
+    assert _lint_rules(src, "src/repro/resilience/chaos.py") == {"RL001"}
+    assert _lint_rules(src, "src/repro/launch/serve.py") == set()
+
+
+def test_rl001_unseeded_numpy_rng():
+    bad = "import numpy as np\nx = np.random.rand(3)\n"
+    assert _lint_rules(bad, "src/repro/resilience/faults.py") == {"RL001"}
+    unseeded_ctor = "import numpy as np\nr = np.random.RandomState()\n"
+    assert _lint_rules(unseeded_ctor,
+                       "src/repro/resilience/faults.py") == {"RL001"}
+    seeded = "import numpy as np\nr = np.random.RandomState(1234)\n"
+    assert _lint_rules(seeded, "src/repro/resilience/faults.py") == set()
+
+
+def test_rl002_host_sync_scoped_to_src_repro():
+    src = """\
+    import jax.numpy as jnp
+    def f(x):
+        return float(jnp.max(x))
+    """
+    assert _lint_rules(src, "src/repro/kernels/k.py") == {"RL002"}
+    assert _lint_rules(src, "tests/test_k.py") == set()  # out of scope
+
+
+def test_rl002_inline_suppression():
+    src = """\
+    import jax.numpy as jnp
+    def f(x):
+        return float(jnp.max(x))  # repro-lint: disable=RL002 — pre-jit
+    """
+    assert _lint_rules(src, "src/repro/kernels/k.py") == set()
+
+
+def test_rl003_broad_except_swallow():
+    bad = """\
+    try:
+        work()
+    except Exception:
+        pass
+    """
+    assert _lint_rules(bad, "benchmarks/run2.py") == {"RL003"}
+    reraised = """\
+    try:
+        work()
+    except Exception:
+        cleanup()
+        raise
+    """
+    assert _lint_rules(reraised, "benchmarks/run2.py") == set()
+    narrow = """\
+    try:
+        work()
+    except ValueError:
+        pass
+    """
+    assert _lint_rules(narrow, "benchmarks/run2.py") == set()
+
+
+def test_rl003_pragma_rides_with_noqa():
+    src = """\
+    try:
+        work()
+    except BaseException as e:  # noqa: BLE001  repro-lint: disable=RL003 — recorded
+        record(e)
+    """
+    assert _lint_rules(src, "src/repro/train/x.py") == set()
+
+
+def test_rl003_file_level_suppression():
+    src = """\
+    # repro-lint: disable-file=RL003 — scratch script
+    try:
+        work()
+    except Exception:
+        pass
+    """
+    assert _lint_rules(src, "benchmarks/scratch.py") == set()
+
+
+def test_rl004_blockspec_arity_mismatch():
+    bad = """\
+    import jax.experimental.pallas as pl
+    def launch(x):
+        return pl.pallas_call(
+            kernel,
+            grid=(4, 4),
+            in_specs=[pl.BlockSpec((8, 8), lambda i: (i, 0))],
+            out_specs=pl.BlockSpec((8, 8), lambda i, j: (i, j)),
+        )(x)
+    """
+    violations = _lint(bad, "src/repro/kernels/k.py")
+    assert [v.rule for v in violations] == ["RL004"]
+    assert "takes 1 argument(s)" in violations[0].message
+    good = bad.replace("lambda i: (i, 0)", "lambda i, j: (i, 0)")
+    assert _lint(good, "src/repro/kernels/k.py") == []
+
+
+def test_rl004_block_shape_rank_mismatch():
+    bad = """\
+    import jax.experimental.pallas as pl
+    def launch(x):
+        return pl.pallas_call(
+            kernel,
+            grid=(4,),
+            in_specs=[pl.BlockSpec((8, 8), lambda i: (i,))],
+        )(x)
+    """
+    violations = _lint(bad, "src/repro/kernels/k.py")
+    assert [v.rule for v in violations] == ["RL004"]
+    assert "rank-2 block shape" in violations[0].message
+
+
+def test_rl005_foreign_private_mutation():
+    src = """\
+    def drain(engine):
+        engine._pending = []
+        engine._queue.append(1)
+    """
+    assert [v.rule for v in _lint(src, "src/repro/launch/engine.py")] \
+        == ["RL005", "RL005"]
+    assert _lint(src, "src/repro/launch/other.py") == []  # out of scope
+    owner = """\
+    class Engine:
+        def drain(self):
+            self._pending = []
+    """
+    assert _lint(owner, "src/repro/launch/engine.py") == []
+
+
+def test_lint_syntax_error_reports_rl000():
+    violations = lint_source("def broken(:\n", "src/repro/x.py")
+    assert [v.rule for v in violations] == ["RL000"]
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def test_cli_check_plan_ok_and_reject(svhn_plan, tmp_path, capsys):
+    from repro.analysis.__main__ import main
+
+    path = save_plan(svhn_plan, str(tmp_path / "cli"))
+    assert main(["check-plan", path]) == 0
+    with open(path) as f:
+        meta = json.load(f)
+    meta["zzz_hand_edit"] = True
+    with open(path, "w") as f:
+        json.dump(meta, f)
+    assert main(["check-plan", path]) == 1
+    assert "PV106" in capsys.readouterr().out
+    assert main(["check-plan"]) == 2  # no plans given
+
+
+def test_cli_lint_list_rules(capsys):
+    from repro.analysis.__main__ import main
+
+    assert main(["lint", "--list-rules"]) == 0
+    out = capsys.readouterr().out
+    for rule in ("RL001", "RL002", "RL003", "RL004", "RL005"):
+        assert rule in out

@@ -6,11 +6,10 @@ dequantized GEMM must match the quantize->float-matmul oracle.
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis_compat import given, settings, st
 
 from repro.core import and_accum, bitplane
-from repro.core.quant import activation_levels, activation_levels_signed, weight_levels
+from repro.core.quant import activation_levels_signed, weight_levels
 
 ENGINES = ["planes", "packed", "int8", "int8_planewise"]
 

@@ -18,7 +18,6 @@ Pins five contracts:
   serializes it, and a reloaded plan dispatches it by table lookup.
 """
 import dataclasses
-import math
 
 import jax
 import jax.numpy as jnp

@@ -7,14 +7,13 @@ import os
 import subprocess
 import sys
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import all_configs, make_plan
-from repro.distributed.sharding import batch_pspec, pspec_for
+from repro.distributed.sharding import pspec_for
 
 
 class FakeMesh:

@@ -6,7 +6,6 @@ import numpy as np
 import pytest
 from hypothesis_compat import given, settings, st
 
-from repro.core.quant import activation_levels, weight_levels
 from repro.kernels import ops, ref
 
 SHAPES = [(5, 70, 9), (17, 130, 33), (64, 64, 64), (3, 33, 5), (130, 600, 140),

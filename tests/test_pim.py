@@ -6,7 +6,6 @@ the structural model (see repro/api/reports.py docstring — this suite
 runs against the HardwareTarget-backed implementation;
 ``repro.pim.accelsim`` is its deprecation shim).
 """
-import numpy as np
 import pytest
 
 from repro.api import reports as A

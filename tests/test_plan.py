@@ -18,7 +18,6 @@ Pins four contracts:
 import dataclasses
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
