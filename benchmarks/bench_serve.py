@@ -222,7 +222,7 @@ def _loop_decode(params, cfg, plan, prompts, new_tokens: int, qmode: str,
     scan path's, so warm loop-vs-scan isolates the DECODE dispatch gap.
     The argmax uses the same real-vocab mask as the scan path (the row
     compares dispatch strategies; vocab policy must not differ)."""
-    from repro.launch.serve import greedy_token, make_prefill, widen_cache
+    from repro.launch.serve import greedy_token, grow_cache, make_prefill
     from repro.models import transformer as T
 
     B, S_p = prompts.shape
@@ -232,7 +232,7 @@ def _loop_decode(params, cfg, plan, prompts, new_tokens: int, qmode: str,
                                       qmode=qmode))
     t0 = time.perf_counter()
     logits, cache = prefill(prompts)
-    cache = widen_cache(cache, S_p, S_p + new_tokens)
+    cache = grow_cache(cache, S_p, S_p + new_tokens)
     tok = greedy_token(logits, cfg.vocab)
     toks = [tok]
     for t in range(new_tokens - 1):
@@ -381,6 +381,150 @@ def throughput_rows(fast: bool = False):
     return rows
 
 
+def continuous_rows(fast: bool = False):
+    """Continuous batching vs bucket dispatch on a MIXED prompt/horizon mix.
+
+    The bucket engine fragments a mixed-length workload into one closed
+    bucket per (prompt-len, horizon) shape — short requests wait on long
+    scans (head-of-line blocking) and ragged buckets pad.  The continuous
+    engine admits at step granularity into a persistent paged-KV decode
+    batch, so the headline comparison is p99 latency + achieved req/s on
+    the same offered load.  Also gates (returned, asserted by the CI fast
+    lane via ``--continuous``):
+
+      * decode bit-identity: the batched continuous run's tokens equal a
+        fresh continuous engine serving the same requests one at a time;
+      * jit-program bounding: the whole replay compiles exactly three
+        programs (prefill chunk, decode step, page reset);
+      * PV108: the LM plan compiles with the paged geometry declared, so
+        the prover has proven the page-table addressing feasible.
+    """
+    import numpy as np
+
+    from repro.core.plan import compile_lm
+    from repro.core.quant import PAPER_CONFIGS
+    from repro.launch.engine import (ContinuousLMEngine, LMRunner,
+                                     ServeEngine, run_offered_load,
+                                     warm_engine)
+    from repro.models import transformer as T
+
+    cfg = dataclasses.replace(get_smoke_lm(), quant=PAPER_CONFIGS["w1a8"])
+    params, _ = T.init_lm(jax.random.PRNGKey(0), cfg, _single_plan())
+    num_slots, page_size, max_seq = 4, 4, 32
+    kv_pages = max_seq // page_size
+    num_pages = 32 if fast else 64
+    n_req = 16 if fast else 64
+    lens = (4, 8) if fast else (4, 8, 16)
+    gens = (4, 8) if fast else (4, 8, 16)
+    # PV108 coverage: the plan declares the paged geometry, so compile-time
+    # verification (verify=True default) proves the page-table bounds
+    lm_plan = compile_lm(params, cfg, batch_hints=(1, num_slots),
+                         prompt_len=max(lens), page_size=page_size,
+                         kv_pages=kv_pages)
+
+    rng = np.random.RandomState(0)
+    payloads = [
+        (rng.randint(0, cfg.vocab,
+                     size=(int(rng.choice(lens)),)).astype(np.int32),
+         int(rng.choice(gens)))
+        for _ in range(n_req)]
+
+    def mk_cont():
+        return ContinuousLMEngine(
+            params, cfg, num_slots=num_slots, page_size=page_size,
+            num_pages=num_pages, max_seq=max_seq, new_tokens=max(gens),
+            qmode="serve", model_plan=lm_plan, max_pending=max(16, n_req))
+
+    def mk_bucket():
+        return ServeEngine(
+            LMRunner(None, cfg, new_tokens=max(gens), qmode="serve",
+                     model_plan=lm_plan),
+            max_batch=num_slots, flush_deadline_s=0.002,
+            max_pending=max(16, n_req))
+
+    # -- restart arm: a FRESH server meets the mixed mix (empty jit cache).
+    # The bucket engine compiles one scan program per (prompt-len, horizon,
+    # padded-batch) combination it dispatches — the mix's combinatorics land
+    # in its p99 — where the continuous engine compiles its three programs
+    # and is done.  This is the bounded-jit-cache claim measured, and the
+    # arm a power-intermittent node actually lives in.
+    restart_b = run_offered_load(mk_bucket(), payloads, rate_rps=None)
+    restart_c = run_offered_load(mk_cont(), payloads, rate_rps=None)
+
+    # -- warm steady-state arm: every program either engine can dispatch is
+    # pre-compiled.  warm_engine only covers the first payload's shape key;
+    # a mixed mix dispatches every (key, padded-size) combination, and any
+    # cold compile inside a measured run would be charged to the bucket arm
+    bucket = warm_engine(mk_bucket(), payloads)
+    by_key = {}
+    for p in payloads:
+        by_key.setdefault(bucket.runner.shape_key(p), p)
+    for p in by_key.values():
+        n_pad = 1
+        while n_pad <= num_slots:
+            bucket.serve([p] * n_pad)
+            n_pad *= 2
+    cont = warm_engine(mk_cont(), payloads)
+    rb = run_offered_load(bucket, payloads, rate_rps=None)
+    rc = run_offered_load(cont, payloads, rate_rps=None)
+
+    # decode bit-identity: batched continuous == one-request-at-a-time
+    # continuous (same chunk schedule, per-slot-independent numerics)
+    seq_eng = mk_cont()
+    seq_vals = []
+    for p in payloads:
+        seq_vals.extend(r.value for r in seq_eng.serve([p]))
+    batch_res = mk_cont().serve(list(payloads))
+    bit_identical = (len(batch_res) == len(seq_vals) and all(
+        np.array_equal(r.value, v) for r, v in zip(batch_res, seq_vals)))
+
+    # mixed offered-load sweep at the same rates through both engines —
+    # the headline p99/req/s comparison
+    sweep = []
+    for mult in ((0.5, 2.0) if fast else (0.5, 1.0, 2.0, 4.0)):
+        rate = mult * rb["achieved_rps"]
+        sweep.append(dict(
+            bucket=run_offered_load(bucket, payloads, rate_rps=rate),
+            continuous=run_offered_load(cont, payloads, rate_rps=rate)))
+
+    return [dict(
+        name="continuous_lm", kind="continuous", n_requests=n_req,
+        prompt_lens=list(lens), horizons=list(gens), slots=num_slots,
+        page_size=page_size, num_pages=num_pages,
+        # headline: the restart arm — req/s and p99 while the jit cache
+        # fills.  The bucket engine's per-(shape, padded-size) compile
+        # storm is its p99; the continuous engine's three programs are
+        # done after the first requests
+        restart_bucket_rps=restart_b["achieved_rps"],
+        restart_bucket_p99_ms=restart_b["p99_ms"],
+        restart_continuous_rps=restart_c["achieved_rps"],
+        restart_continuous_p99_ms=restart_c["p99_ms"],
+        restart_speedup_rps=round(restart_c["achieved_rps"]
+                                  / max(restart_b["achieved_rps"], 1e-9), 2),
+        restart_p99_improvement=round(restart_b["p99_ms"]
+                                      / max(restart_c["p99_ms"], 1e-9), 2),
+        # warm steady state.  At smoke scale on CPU the bucket engine's
+        # fused whole-generation scan amortizes host dispatch across the
+        # horizon while the continuous engine pays one host sync per
+        # decode step, so the warm crossover needs per-step compute large
+        # enough to swamp dispatch (accelerator-scale models); the
+        # structural wins that survive every scale are the bounded jit
+        # cache (restart arm) and paged KV occupancy (pool stats)
+        warm_bucket_rps=rb["achieved_rps"], warm_bucket_p50_ms=rb["p50_ms"],
+        warm_bucket_p99_ms=rb["p99_ms"],
+        warm_continuous_rps=rc["achieved_rps"],
+        warm_continuous_p50_ms=rc["p50_ms"],
+        warm_continuous_p99_ms=rc["p99_ms"],
+        warm_continuous_queue_p99_ms=rc["queue_p99_ms"],
+        warm_continuous_service_p99_ms=rc["service_p99_ms"],
+        bit_identical_vs_sequential=bool(bit_identical),
+        jit_programs=sorted(str(p) for p in cont.program_shapes),
+        n_jit_programs=len(cont.program_shapes),
+        pool=cont.pool.stats(),
+        plan_fingerprint=lm_plan.fingerprint(),
+        offered_sweep=sweep)]
+
+
 def get_smoke_lm():
     from repro.configs import all_configs
 
@@ -409,6 +553,7 @@ def serve_rows(fast: bool = False):
     rows += plan_rows(fast=fast)
     rows += decode_rows(fast=fast)
     rows += throughput_rows(fast=fast)
+    rows += continuous_rows(fast=fast)
     os.makedirs("results", exist_ok=True)
     with open("results/bench_serve.json", "w") as f:
         json.dump(rows, f, indent=1, default=str)
@@ -419,11 +564,31 @@ def main():
     import sys
 
     fast = "--fast" in sys.argv
+    if "--continuous" in sys.argv:
+        # CI fast lane: only the continuous-vs-bucket comparison, with the
+        # decode bit-identity gate as the exit code (a mismatch means the
+        # paged path's numerics drifted from the sequential reference)
+        rows = continuous_rows(fast=fast)
+        os.makedirs("results", exist_ok=True)
+        with open("results/bench_serve_continuous.json", "w") as f:
+            json.dump(rows, f, indent=1, default=str)
+        print("name,us_per_call,derived")
+        for r in rows:
+            extra = {k: v for k, v in r.items() if k not in ("name",)}
+            print(f"{r['name']},{r['restart_speedup_rps']},{json.dumps(extra)}")
+        print("# full rows -> results/bench_serve_continuous.json",
+              file=sys.stderr)
+        if not all(r["bit_identical_vs_sequential"] for r in rows):
+            print("FAIL: continuous decode is not bit-identical to the "
+                  "sequential reference", file=sys.stderr)
+            sys.exit(1)
+        return
     print("name,us_per_call,derived")
     for r in serve_rows(fast=fast):
         us = r.get("fused_us", r.get("scan_warm_us",
                                      r.get("warm_e2e_us",
-                                           r.get("batch8_rps"))))
+                                           r.get("batch8_rps",
+                                                 r.get("restart_speedup_rps")))))
         extra = {k: v for k, v in r.items() if k not in ("name",)}
         print(f"{r['name']},{us},{json.dumps(extra)}")
     print("# full rows -> results/bench_serve.json", file=sys.stderr)

@@ -26,6 +26,11 @@ dispatch, the contracts the kernels assume:
   :func:`verify_plan_file`, the on-disk metadata IS the reloaded plan's).
 * **PV107** — structural invariants: version, batch hints, per-layer
   engine tables, conv GEMM-depth consistency.
+* **PV108** — paged-attention feasibility: every paged verdict (10-tuple
+  key, see ``ops.attn_plan_key``) proves its page geometry via
+  ``ops.paged_attn_bounds`` at the plan's largest batch hint — page size
+  tiles the table extent, the flat KV gather index stays in int32, and
+  one grid step (q block + one KV page + scratch) fits the VMEM budget.
 
 Wired into ``compile_model`` / ``compile_lm`` (on by default,
 ``verify=False`` escape hatch) and the ``python -m repro.analysis
@@ -56,7 +61,7 @@ _ATTN_BITS = 8
 class Violation:
     """One failed proof obligation."""
 
-    rule: str       # "PV101".."PV107"
+    rule: str       # "PV101".."PV108"
     where: str      # plan coordinates: layer/batch/engine or table key
     message: str
 
@@ -239,7 +244,9 @@ def _check_tables(plan, backend: str, out) -> None:
                 "verdict installs it"))
     for key, eng in sorted(plan.attn_table.items()):
         where = f"attn_table[{key!r}]"
-        if len(key) != 8 or key[0] != "attn":
+        # contiguous keys are 8-tuples; paged keys append (page_size,
+        # seq_kv) — see ops.attn_plan_key
+        if len(key) not in (8, 10) or key[0] != "attn":
             out.append(Violation("PV104", where, "malformed attn_plan_key"))
             continue
         if eng not in ops.ATTN_ENGINES:
@@ -248,15 +255,30 @@ def _check_tables(plan, backend: str, out) -> None:
                 f"unknown attention engine {eng!r} "
                 f"(expected one of {ops.ATTN_ENGINES})"))
             continue
+        paged = len(key) == 10
         attn = ops.AttnShape(
-            seq_q=int(key[1]), seq_kv=int(key[1]), heads=int(key[2]),
+            seq_q=int(key[1]),
+            seq_kv=int(key[9]) if paged else int(key[1]),
+            heads=int(key[2]),
             head_dim=int(key[3]), causal=bool(key[4]),
-            window=int(key[5]) or None, quantized=bool(key[6]))
+            window=int(key[5]) or None, quantized=bool(key[6]),
+            page_size=int(key[8]) if paged else None)
         ok, reason = ops.attn_engine_feasible(eng, attn, str(key[7]))
         if not ok:
             out.append(Violation(
                 "PV103", where,
                 f"attention verdict {eng!r} is infeasible: {reason}"))
+        if paged:
+            # PV108: the page-indexed gather must be provably addressable
+            # (int32 flat index at the plan's largest batch hint) and one
+            # grid step VMEM-resident — an engine built on this plan never
+            # discovers an overflowing page table at serve time
+            ok, reason = ops.paged_attn_bounds(attn,
+                                               batch=max(plan.batch_hints))
+            if not ok:
+                out.append(Violation(
+                    "PV108", where,
+                    f"paged-attention geometry infeasible: {reason}"))
 
 
 def _check_cost(lp, where: str, out) -> None:

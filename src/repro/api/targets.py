@@ -177,10 +177,15 @@ class ComputeTarget(HardwareTarget):
                        defined when a window bounds the band;
           ``flash``    the quantized flash kernel — only when the serve
                        path is quantized (it consumes level-quantized q/k,
-                       so it would change train/full-precision numerics).
+                       so it would change train/full-precision numerics);
+          ``paged``    the page-table gather engine — page-table
+                       geometries (``attn.page_size`` set) ALWAYS dispatch
+                       it: no other engine can read a paged pool.
         """
         from repro.kernels.attn_flash import flash_levels_exact
 
+        if getattr(attn, "page_size", None):
+            return "paged"
         t = dict(self.table)
         seq = max(attn.seq_q, attn.seq_kv)
         if (attn.quantized and seq >= t["attn_flash_seq_min"]

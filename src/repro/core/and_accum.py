@@ -212,20 +212,28 @@ def quant_dense_forward_pre(
 
 
 def quant_dense_forward_signed(
-    a: jax.Array, w: jax.Array, a_bits: int, w_bits: int, engine: str = "int8"
+    a: jax.Array, w: jax.Array, a_bits: int, w_bits: int, engine: str = "int8",
+    a_scale_mode: str = "tensor",
 ) -> jax.Array:
     """Signed-activation quantized dense (transformers): full affine correction.
 
     a = s_a*(A - z_a), w = s_w*(W - z_w)  =>
     a@w = s_a s_w [A@W - z_w*rowsum(A) - z_a*colsum(W) + K*z_a*z_w]
     All four terms exact int32; only the final scaling is float.
+
+    ``a_scale_mode='row'`` uses a per-row activation absmax (s_a becomes
+    (M, 1)) — the correction algebra is unchanged because z_a stays the
+    constant 2^(b-1); see ``core.quant.activation_levels_signed_row``.
     """
-    from .quant import activation_levels_signed, weight_levels
+    from .quant import (activation_levels_signed,
+                        activation_levels_signed_row, weight_levels)
 
     lead = a.shape[:-1]
     K = a.shape[-1]
     a2 = a.reshape((-1, K))
-    a_lv, s_a, z_a = activation_levels_signed(a2, a_bits)
+    lv_fn = (activation_levels_signed_row if a_scale_mode == "row"
+             else activation_levels_signed)
+    a_lv, s_a, z_a = lv_fn(a2, a_bits)
     w_lv, s_w, z_w = weight_levels(w, w_bits)
     acc = _ENGINES[engine](a_lv, w_lv, a_bits, w_bits).astype(jnp.float32)
     rowsum = jnp.sum(a_lv, axis=-1, dtype=jnp.int32).astype(jnp.float32)
@@ -237,17 +245,24 @@ def quant_dense_forward_signed(
 
 def quant_dense_forward_signed_pre(
     a: jax.Array, w_lv: jax.Array, s_w, z_w, a_bits: int, w_bits: int,
-    engine: str = "int8", a_scale: float | None = None,
+    engine: str = "int8", a_scale: "float | str | None" = None,
 ) -> jax.Array:
     """Signed quantized dense with PRE-QUANTIZED weights (int8 levels stored
     in the checkpoint — the TPU analogue of keeping C_n(W) resident in the
-    SOT-MRAM sub-array).  4x less weight HBM traffic than fp32 at serve."""
-    from .quant import activation_levels_signed
+    SOT-MRAM sub-array).  4x less weight HBM traffic than fp32 at serve.
+
+    ``a_scale`` selects the activation-scale source: a float installs a
+    static (offline-calibrated) scale, the string ``'row'`` a per-row
+    dynamic absmax (batch-independent numerics for continuous batching),
+    and ``None`` the default per-tensor dynamic absmax."""
+    from .quant import activation_levels_signed, activation_levels_signed_row
 
     lead = a.shape[:-1]
     K = a.shape[-1]
     a2 = a.reshape((-1, K))
-    if a_scale is not None:
+    if a_scale == "row":
+        a_lv, s_a, z_a = activation_levels_signed_row(a2, a_bits)
+    elif a_scale is not None:
         # static (offline-calibrated) activation scale: no dynamic absmax
         # reduction (and no cross-shard all-reduce) on the serve path
         n = (1 << a_bits) - 1

@@ -445,12 +445,21 @@ def plan_forward(plan: ModelPlan, x, params=None):
 
 def compile_lm(params, cfg, *, backend=None, batch_hints=(1,),
                prompt_len: int = 16, autotune: bool = False,
+               page_size: int | None = None, kv_pages: int | None = None,
                verify: bool = True) -> ModelPlan:
     """Compile a transformer serve plan: pre-quantize every projection once
     and resolve one engine verdict per distinct (K, N) GEMM shape into the
     plan's dense table (consulted by ``select_engine`` while the plan is
     active).  Verdicts are ``m``-free — one entry covers prefill and every
     decode step (see :func:`repro.kernels.ops.dense_plan_key`).
+
+    ``page_size``/``kv_pages`` declare the paged-KV serve geometry of the
+    continuous-batching engine (``launch/engine.ContinuousLMEngine``:
+    ``kv_pages`` = page-table width = per-request page budget): the plan
+    then carries a ``paged`` attention verdict for the decode-step shape,
+    and the prover's PV108 check proves the page-indexed gather feasible
+    (int32 addressing, VMEM-bounded grid step) before the engine ever
+    dispatches it.
 
     ``verify=True`` (default) runs the static plan prover over the result
     (see :func:`compile_model`); ``verify=False`` bypasses it.
@@ -507,7 +516,8 @@ def compile_lm(params, cfg, *, backend=None, batch_hints=(1,),
     # heuristic path — a compiling plan must not absorb another installed
     # plan's verdicts.
     attn_table = _plan_lm_attention(params, cfg, quant, backend,
-                                    batch_hints, prompt_len, layers)
+                                    batch_hints, prompt_len, layers,
+                                    page_size=page_size, kv_pages=kv_pages)
     tuned = {}
     if autotune:  # heuristic plans carry no measurements (determinism)
         tuned = {k: v for k, v in ops._AUTOTUNE_CACHE.items()
@@ -527,12 +537,15 @@ def compile_lm(params, cfg, *, backend=None, batch_hints=(1,),
 
 def _plan_lm_attention(params, cfg, quant: QuantConfig, backend: str,
                        batch_hints: tuple, prompt_len: int,
-                       layers: list) -> dict:
+                       layers: list, page_size: int | None = None,
+                       kv_pages: int | None = None) -> dict:
     """Resolve and record the attention engine per window geometry.
 
     Appends one ``op="attn"`` :class:`LayerPlan` row per verdict to
     ``layers`` and returns the :func:`repro.kernels.ops.attn_plan_key`
-    table the plan installs for dispatch.
+    table the plan installs for dispatch.  With ``page_size``/``kv_pages``
+    set, one extra row records the paged decode-step verdict (10-tuple
+    key; see :func:`repro.kernels.ops.attn_plan_key`).
     """
     from repro.api.targets import target_for_backend
     from repro.models.layers import attn_quantized
@@ -565,6 +578,31 @@ def _plan_lm_attention(params, cfg, quant: QuantConfig, backend: str,
             cin=cfg.d_model, cout=cfg.d_model, in_h=0, in_w=0,
             out_h=0, out_w=0, k=cfg.hd, a_bits=quant.a_bits,
             w_bits=quant.w_bits, engine=eng, engine_source="heuristic",
+            engines=tuple((b, eng) for b in batch_hints),
+            cost=(c.energy_pj, c.cycles, c.bytes_moved), attn_engine=eng))
+    if page_size is not None:
+        if not kv_pages or kv_pages < 1:
+            raise ValueError(f"page_size={page_size} needs kv_pages >= 1 "
+                             f"(per-request page budget), got {kv_pages}")
+        # the continuous engine's decode-step geometry: one query token per
+        # slot against a page-table extent of kv_pages pages.  batch is the
+        # slot count (the largest co-resident decode batch)
+        attn = ops.AttnShape(
+            seq_q=1, seq_kv=page_size * kv_pages, heads=cfg.n_heads,
+            head_dim=cfg.hd, causal=bool(cfg.causal), window=None,
+            batch=max(batch_hints),
+            quantized=attn_quantized(quant, "serve"),
+            page_size=page_size)
+        eng = cost_target.select_attn_engine(attn)
+        attn_table[ops.attn_plan_key(attn, backend)] = eng
+        c = cost_target.attn_cost(attn)
+        layers.append(LayerPlan(
+            index=len(layers), name=f"attn[paged {kv_pages}x{page_size}]",
+            op="attn", role="mid", fp=not attn.quantized, kh=0, kw=0,
+            stride=1, padding="", cin=cfg.d_model, cout=cfg.d_model,
+            in_h=0, in_w=0, out_h=0, out_w=0, k=cfg.hd,
+            a_bits=quant.a_bits, w_bits=quant.w_bits, engine=eng,
+            engine_source="heuristic",
             engines=tuple((b, eng) for b in batch_hints),
             cost=(c.energy_pj, c.cycles, c.bytes_moved), attn_engine=eng))
     return attn_table

@@ -36,6 +36,15 @@ class QuantConfig:
     # 'f32dot' (exact float-unit GEMM), 'fp' (no bitwise engine;
     # quantize-dequantize only).
     engine: str = "auto"
+    # Dynamic activation-scale granularity on the signed serve path:
+    # 'tensor' (one absmax over the whole dispatched batch — the default,
+    # matching the paper's per-tensor DoReFa levels) or 'row' (one absmax
+    # per GEMM row).  'row' makes every sample's numerics independent of
+    # its batchmates — required by the continuous-batching engine, whose
+    # slots hold unrelated in-flight requests (a shared absmax would let
+    # one request perturb another's integer levels).  Ignored when a
+    # static calibrated scale is installed (models.layers.set_static_act_scale).
+    act_scale_mode: str = "tensor"
 
     @property
     def inference_complexity(self) -> int:
@@ -146,6 +155,23 @@ def activation_levels_signed(a: jax.Array, bits: int):
     n = (1 << bits) - 1
     z = float(1 << (bits - 1))
     s = jnp.max(jnp.abs(a)) / z + 1e-12
+    levels = jnp.clip(jnp.round(a / s) + z, 0, n).astype(jnp.int32)
+    return levels, s.astype(a.dtype), jnp.asarray(z, a.dtype)
+
+
+def activation_levels_signed_row(a: jax.Array, bits: int):
+    """Per-ROW variant of :func:`activation_levels_signed`.
+
+    a is (M, K); the scale is a per-row absmax, shape (M, 1), so row m's
+    levels depend on row m alone.  This is the batch-independence form the
+    continuous-batching serve path requires (``QuantConfig.act_scale_mode
+    == 'row'``): a decode slot's integer levels — and therefore its output
+    bits — cannot change when unrelated requests join or leave the batch.
+    The zero point is the same constant 2^(b-1).
+    """
+    n = (1 << bits) - 1
+    z = float(1 << (bits - 1))
+    s = jnp.max(jnp.abs(a), axis=-1, keepdims=True) / z + 1e-12
     levels = jnp.clip(jnp.round(a / s) + z, 0, n).astype(jnp.int32)
     return levels, s.astype(a.dtype), jnp.asarray(z, a.dtype)
 

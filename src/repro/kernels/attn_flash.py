@@ -381,6 +381,252 @@ def attn_flash_pallas(q, k, v, *, causal: bool = True,
     return out[:, :Sq]
 
 
+# ---------------------------------------------------------------------------
+# Paged attention (continuous-batching serve path)
+# ---------------------------------------------------------------------------
+#
+# KV lives in a shared block pool (NP+1, ps, Hkv, hd) — NP fixed-size pages
+# plus one reserved, never-written null page — and each decode slot owns an
+# ordered page-table row (P page indices, padded with the null page).  The
+# engine gathers a slot's KV through its table row and attends with the
+# device-side position buffer ``ppos`` ((NP+1, ps), -1 = never written) as
+# the validity mask, so ragged final pages and table padding cost a mask,
+# not a copy.  All reductions are SLOT-LOCAL by construction (per-slot
+# quantization scales, per-slot softmax): a slot's output bits depend only
+# on its own row content — the property that makes step-granular join/
+# leave bit-identical to running the same engine one request at a time.
+
+
+def _paged_slot_scales(q, pool_k, ppos, table, bits: int):
+    """Per-SLOT affine scales for the quantized paged dot.
+
+    s_q[b] from slot b's own query rows; s_k[b] from slot b's gathered K
+    masked by ``ppos >= 0`` — stale content in freed-and-reused pages (and
+    the null page) can never perturb a live slot's scale."""
+    z = float(1 << (bits - 1))
+    s_q = jnp.max(jnp.abs(q).astype(jnp.float32), axis=(1, 2, 3)) / z + 1e-12
+    kg = jnp.abs(pool_k[table]).astype(jnp.float32)    # (B, P, ps, Hkv, hd)
+    valid = (ppos[table] >= 0)[..., None, None]
+    s_k = jnp.max(jnp.where(valid, kg, 0.0), axis=(1, 2, 3, 4)) / z + 1e-12
+    return s_q, s_k
+
+
+def _paged_expand_idx(n_q_real: int, n_q_padded: int, hkv: int):
+    """GQA head map for the gathered KV (layers.expand_kv's rule, inlined —
+    importing it from models.layers would be circular)."""
+    g = max(n_q_real // hkv, 1)
+    return jnp.minimum(jnp.arange(n_q_padded) // g, hkv - 1)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "quantized", "bits", "n_q_heads"))
+def attn_paged_xla(q, pool_k, pool_v, ppos, table, q_pos, *,
+                   causal: bool = True, window: Optional[int] = None,
+                   quantized: bool = False, bits: int = 8,
+                   n_q_heads: Optional[int] = None) -> jax.Array:
+    """Gather realization of paged attention (CPU/GPU engine; the oracle
+    for the Pallas kernel).
+
+    q (B, S, Hp, hd); pool_k/pool_v (NP+1, ps, Hkv, hd); ppos (NP+1, ps);
+    table (B, P) page indices; q_pos (B, S) absolute query positions with
+    -1 marking invalid (padding) rows.  Logits are materialized at
+    (B, Hp, S, P*ps) — the paged geometries are decode steps and prefill
+    chunks, so S and P*ps are both small by design.
+    """
+    B, S, Hp, hd = q.shape
+    NP1, ps, Hkv, _ = pool_k.shape
+    P = table.shape[1]
+    n_q = n_q_heads or Hp
+    kg = pool_k[table].reshape(B, P * ps, Hkv, hd)
+    vg = pool_v[table].reshape(B, P * ps, Hkv, hd)
+    pos_g = ppos[table].reshape(B, P * ps)
+    if quantized:
+        if not flash_levels_exact(hd, bits, bits):
+            raise ValueError(
+                f"paged centered-level dot inexact at head_dim={hd}, "
+                f"bits={bits}")
+        z = float(1 << (bits - 1))
+        s_q, s_k = _paged_slot_scales(q, pool_k, ppos, table, bits)
+        qc = _levels(q, s_q[:, None, None, None], bits) - z
+        kc = _levels(kg, s_k[:, None, None, None], bits) - z
+    else:
+        qc = q.astype(jnp.float32)
+        kc = kg.astype(jnp.float32)
+    if Hkv != Hp:
+        idx = _paged_expand_idx(n_q, Hp, Hkv)
+        kc = jnp.take(kc, idx, axis=2)
+        vg = jnp.take(vg, idx, axis=2)
+    logits = jnp.einsum("bqhd,bshd->bhqs", qc, kc,
+                        preferred_element_type=jnp.float32)
+    if quantized:
+        logits = logits * (s_q * s_k / math.sqrt(hd))[:, None, None, None]
+    else:
+        logits = logits / math.sqrt(hd)
+    m = (pos_g >= 0)[:, None, None, :]
+    if causal:
+        m = m & (pos_g[:, None, None, :] <= q_pos[:, None, :, None])
+    if window is not None:
+        m = m & (pos_g[:, None, None, :] > q_pos[:, None, :, None] - window)
+    logits = jnp.where(m, logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqs,bshd->bqhd", p, vg.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def _paged_kernel(tbl_ref, scal_ref, zint_ref, qpos_ref, q_ref, k_ref,
+                  v_ref, pos_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  bits, causal, window, n_q_heads, n_pages):
+    """One (slot b, table column p) grid step.
+
+    The KV BlockSpecs are *page-indexed through the scalar-prefetched
+    table* (``tbl[b, p]``), so the kernel sees slot b's p-th page as a
+    contiguous block; the null page arrives fully masked (its ppos is all
+    -1).  Online-softmax (m, l, acc) scratch is carried across the inner
+    page dimension, one (S, 128)/(S, hd) row band per query head.
+    """
+    b, p = pl.program_id(0), pl.program_id(1)
+    S, Hp, hd = q_ref.shape[1], q_ref.shape[2], q_ref.shape[3]
+    ps, Hkv = k_ref.shape[1], k_ref.shape[2]
+
+    @pl.when(p == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    z_q, z_k = zint_ref[0], zint_ref[1]
+    scal = scal_ref[b]
+    pos = pos_ref[0]                      # (ps,) absolute positions, -1 dead
+    iq = qpos_ref[0]                      # (S,) query positions, -1 dead
+    msk = jnp.broadcast_to(pos[None, :] >= 0, (S, ps))
+    if causal:
+        msk &= pos[None, :] <= iq[:, None]
+    if window is not None:
+        msk &= pos[None, :] > iq[:, None] - window
+
+    g = max(n_q_heads // Hkv, 1)
+    for j in range(Hp):                   # unrolled: Hp is small & static
+        jkv = min(j // g, Hkv - 1)
+        ql = q_ref[0, :, j].astype(jnp.int32)      # (S, hd) levels
+        kl = k_ref[0, :, jkv].astype(jnp.int32)    # (ps, hd)
+        acc = jnp.zeros((S, ps), jnp.int32)
+        for gq, sq in _nibble_split(ql, bits):
+            for gk, sk in _nibble_split(kl, bits):
+                d = jax.lax.dot_general(
+                    gq.astype(jnp.int8), gk.astype(jnp.int8),
+                    dimension_numbers=(((1,), (1,)), ((), ())),
+                    preferred_element_type=jnp.int32)
+                acc += d << (sq + sk)
+        rs_q = jnp.sum(ql, axis=1)
+        rs_k = jnp.sum(kl, axis=1)
+        corr = (acc - z_k * rs_q[:, None] - z_q * rs_k[None, :]
+                + hd * z_q * z_k)
+        logits = jnp.where(msk, corr.astype(jnp.float32) * scal, NEG_INF)
+
+        r0 = j * S
+        m_old = m_ref[r0:r0 + S, :1]
+        m_new = jnp.maximum(m_old, jnp.max(logits, axis=1, keepdims=True))
+        pw = jnp.exp(logits - m_new) * msk
+        cf = jnp.exp(m_old - m_new)
+        l_new = l_ref[r0:r0 + S, :1] * cf + jnp.sum(pw, axis=1,
+                                                    keepdims=True)
+        acc_ref[r0:r0 + S] = acc_ref[r0:r0 + S] * cf + jax.lax.dot_general(
+            pw, v_ref[0, :, jkv].astype(jnp.float32),
+            dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[r0:r0 + S] = jnp.broadcast_to(m_new, (S, 128))
+        l_ref[r0:r0 + S] = jnp.broadcast_to(l_new, (S, 128))
+
+    @pl.when(p == n_pages - 1)
+    def _epilogue():
+        for j in range(Hp):
+            r0 = j * S
+            l = jnp.maximum(l_ref[r0:r0 + S, :1], 1e-30)
+            o_ref[0, :, j] = (acc_ref[r0:r0 + S] / l).astype(o_ref.dtype)
+
+
+def attn_paged_pallas(q, pool_k, pool_v, ppos, table, q_pos, *,
+                      causal: bool = True, window: Optional[int] = None,
+                      bits: int = 8, n_q_heads: Optional[int] = None,
+                      interpret: bool = True) -> jax.Array:
+    """Pallas realization (quantized path only; shapes as
+    :func:`attn_paged_xla`).
+
+    ``PrefetchScalarGridSpec`` prefetches the page table so the KV
+    BlockSpec index maps can select blocks *through* it — the gather never
+    materializes on the host side of the kernel.  Per-slot scales are a
+    cheap host prepass: s_k is scattered onto the pages through the table
+    (each real page has exactly one owner; the null page's winner is
+    irrelevant — its ppos keeps it fully masked).
+    """
+    B, S, Hp, hd = q.shape
+    NP1, ps, Hkv, _ = pool_k.shape
+    P = table.shape[1]
+    if not flash_levels_exact(hd, bits, bits):
+        raise ValueError(
+            f"paged centered-level dot inexact at head_dim={hd}, bits={bits}")
+    z = float(1 << (bits - 1))
+    s_q, s_k = _paged_slot_scales(q, pool_k, ppos, table, bits)
+    page_scale = jnp.ones((NP1,), jnp.float32).at[table.reshape(-1)].set(
+        jnp.repeat(s_k, P), mode="drop")
+    ql = _levels(q, s_q[:, None, None, None], bits).astype(jnp.int32)
+    kl = _levels(pool_k, page_scale[:, None, None, None], bits
+                 ).astype(jnp.int32)
+    scal = (s_q * s_k / math.sqrt(hd)).astype(jnp.float32)       # (B,)
+    zint = jnp.asarray([int(z), int(z)], jnp.int32)
+
+    kernel = functools.partial(
+        _paged_kernel, bits=bits, causal=causal, window=window,
+        n_q_heads=n_q_heads or Hp, n_pages=P)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, P),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),                # scal (B,)
+            pl.BlockSpec(memory_space=pltpu.SMEM),                # zint (2,)
+            pl.BlockSpec((1, S), lambda tbl, b, p: (b, 0)),
+            pl.BlockSpec((1, S, Hp, hd), lambda tbl, b, p: (b, 0, 0, 0)),
+            pl.BlockSpec((1, ps, Hkv, hd),
+                         lambda tbl, b, p: (tbl[b, p], 0, 0, 0)),
+            pl.BlockSpec((1, ps, Hkv, hd),
+                         lambda tbl, b, p: (tbl[b, p], 0, 0, 0)),
+            pl.BlockSpec((1, ps), lambda tbl, b, p: (tbl[b, p], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, S, Hp, hd), lambda tbl, b, p: (b, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((Hp * S, 128), jnp.float32),
+            pltpu.VMEM((Hp * S, 128), jnp.float32),
+            pltpu.VMEM((Hp * S, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, S, Hp, hd), q.dtype),
+        interpret=interpret,
+    )(table.astype(jnp.int32), scal, zint, q_pos.astype(jnp.int32),
+      ql, kl, pool_v, ppos)
+    return out
+
+
+def attn_paged(q, pool_k, pool_v, ppos, table, q_pos, *,
+               causal: bool = True, window: Optional[int] = None,
+               quantized: bool = False, bits: int = 8,
+               n_q_heads: Optional[int] = None) -> jax.Array:
+    """Backend-dispatched paged attention (the ``paged`` engine entry):
+    native Pallas kernel on TPU when quantized, the gather realization
+    elsewhere (and always for fp configs — the Pallas kernel is the
+    integer-levels path)."""
+    n_q = n_q_heads or q.shape[2]
+    if quantized and jax.default_backend() == "tpu":
+        return attn_paged_pallas(q, pool_k, pool_v, ppos, table, q_pos,
+                                 causal=causal, window=window, bits=bits,
+                                 n_q_heads=n_q, interpret=False)
+    return attn_paged_xla(q, pool_k, pool_v, ppos, table, q_pos,
+                          causal=causal, window=window, quantized=quantized,
+                          bits=bits, n_q_heads=n_q)
+
+
 def attn_flash(q, k, v, *, causal: bool = True, window: Optional[int] = None,
                q_bits: int = 8, k_bits: int = 8,
                block_q: Optional[int] = None,

@@ -106,12 +106,21 @@ class AttnShape:
     batch: int = 1
     quantized: bool = False
     banded_ok: bool = True
+    # Paged KV geometry (continuous-batching serve path): None = contiguous
+    # KV; an int makes this a page-table dispatch — seq_kv is then the
+    # table extent (table width * page_size), the per-slot KV capacity.
+    page_size: int | None = None
 
 
 # Attention engines: all realized off-TPU (full/chunked/banded are plain
-# XLA; flash has an exact XLA realization), so none are backend-gated the
-# way PALLAS_ENGINES are.
-ATTN_ENGINES = ("full", "chunked", "banded", "flash")
+# XLA; flash has an exact XLA realization, paged a gather realization), so
+# none are backend-gated the way PALLAS_ENGINES are.
+ATTN_ENGINES = ("full", "chunked", "banded", "flash", "paged")
+
+# VMEM budget for one paged-attention grid step (q block + one KV page +
+# online-softmax scratch), bytes.  Conservative half of a v4/v5 core's
+# 16 MiB VMEM — the other half covers double-buffered pipelining.
+PAGED_VMEM_BUDGET = 8 * 1024 * 1024
 
 
 def attn_plan_key(attn: "AttnShape", backend: str) -> tuple:
@@ -121,10 +130,45 @@ def attn_plan_key(attn: "AttnShape", backend: str) -> tuple:
     engine crossover is *about* S.  Batch is dropped — the serving engine
     re-buckets batch per dispatch, and every engine verdict is
     batch-monotone (a bigger batch only favors the tiled engines more).
+
+    Paged dispatches extend the key with (page_size, seq_kv) — a 10-tuple
+    where contiguous keys stay 8-tuples — because the paged program is
+    shaped by the page geometry, not just the query side.
     """
-    return ("attn", attn.seq_q, attn.heads, attn.head_dim,
-            bool(attn.causal), attn.window or 0, bool(attn.quantized),
-            backend)
+    key = ("attn", attn.seq_q, attn.heads, attn.head_dim,
+           bool(attn.causal), attn.window or 0, bool(attn.quantized),
+           backend)
+    if attn.page_size:
+        key = key + (attn.page_size, attn.seq_kv)
+    return key
+
+
+def paged_attn_bounds(attn: "AttnShape", batch: int = 1) -> tuple[bool, str]:
+    """Static feasibility bounds for the paged engine (PV108's predicate).
+
+    (1) the page size must tile the table extent exactly (the table is
+    ``seq_kv / page_size`` whole pages); (2) the flat KV pool index
+    ``batch * seq_kv * heads * head_dim`` must stay addressable in int32
+    (the gather/scatter index dtype); (3) one grid step's VMEM residency
+    (q block + one KV page + scratch, f32) must fit PAGED_VMEM_BUDGET.
+    """
+    ps = attn.page_size
+    if not ps or ps < 1:
+        return False, "paged needs a positive page_size"
+    if attn.seq_kv % ps != 0:
+        return False, (f"page_size={ps} does not tile the table extent "
+                       f"seq_kv={attn.seq_kv}")
+    flat = batch * attn.seq_kv * attn.heads * attn.head_dim
+    if flat >= (1 << 31):
+        return False, (f"flat KV index {flat} overflows int32 "
+                       f"(batch={batch}, seq_kv={attn.seq_kv})")
+    step_bytes = 4 * (attn.seq_q * attn.heads * attn.head_dim    # q block
+                      + 2 * ps * attn.heads * attn.head_dim      # k+v page
+                      + attn.heads * attn.seq_q * (256 + attn.head_dim))
+    if step_bytes > PAGED_VMEM_BUDGET:
+        return False, (f"paged grid step needs {step_bytes} B VMEM "
+                       f"(> {PAGED_VMEM_BUDGET})")
+    return True, ""
 
 
 def attn_engine_feasible(engine: str, attn: "AttnShape",
@@ -150,8 +194,18 @@ def attn_engine_feasible(engine: str, attn: "AttnShape",
             return False, (f"flash score dot inexact at head_dim="
                            f"{attn.head_dim} (exceeds the fp32 mantissa)")
         return True, ""
-    if engine in ATTN_ENGINES:
+    if engine == "paged":
+        ok, why = paged_attn_bounds(attn, batch=max(attn.batch, 1))
+        if not ok:
+            return False, why
+        if attn.quantized and not flash_levels_exact(attn.head_dim, 8, 8):
+            return False, (f"paged score dot inexact at head_dim="
+                           f"{attn.head_dim} (exceeds the fp32 mantissa)")
         return True, ""
+    if engine in ATTN_ENGINES:
+        ok = attn.page_size is None
+        return ok, "" if ok else (f"{engine} is a contiguous-KV engine; "
+                                  "page-table geometries dispatch 'paged'")
     return False, f"unknown attention engine {engine!r}"
 
 

@@ -66,10 +66,21 @@ class Result:
     t_done: float
     batch: int    # real co-batched requests in the dispatch
     padded: int   # dispatched batch after padding
+    t_start: float = 0.0  # when the engine began computing this request
 
     @property
     def latency_s(self) -> float:
         return self.t_done - self.t_submit
+
+    @property
+    def queue_wait_s(self) -> float:
+        """Submit -> first compute (bucket dispatch / slot admission)."""
+        return max(self.t_start - self.t_submit, 0.0)
+
+    @property
+    def service_s(self) -> float:
+        """First compute -> harvest (the request's time on device)."""
+        return self.t_done - self.t_start
 
 
 @dataclasses.dataclass
@@ -189,8 +200,14 @@ class LMRunner:
     """Batched LM generate (tokens (S_p,) -> generated tokens (S_d,)).
 
     One device program per (prompt-len, horizon) bucket shape: jitted
-    prefill + cache widening + the one-trace ``lax.scan`` greedy decode of
+    prefill + cache growth + the one-trace ``lax.scan`` greedy decode of
     ``launch/serve.py``, fused into a single dispatch per bucket.
+
+    Payloads are either a plain token array (horizon = the runner-level
+    ``new_tokens`` default) or a ``(tokens, new_tokens)`` tuple for
+    per-request horizons — mixed horizons land in distinct buckets (the
+    shape key includes the horizon), which is exactly the fragmentation
+    the continuous engine exists to remove.
     """
 
     def __init__(self, params, cfg, *, new_tokens: int, qmode: str = "serve",
@@ -208,17 +225,28 @@ class LMRunner:
         return (None if self.model_plan is None
                 else self.model_plan.fingerprint())
 
+    @staticmethod
+    def split_payload(payload) -> tuple:
+        """Normalize a payload to ``(tokens, new_tokens | None)``."""
+        if isinstance(payload, tuple):
+            toks, nt = payload
+            return np.asarray(toks, np.int32), int(nt)
+        return np.asarray(payload, np.int32), None
+
     def shape_key(self, payload) -> tuple:
-        return ("lm", int(np.asarray(payload).shape[-1]), self.new_tokens)
+        toks, nt = self.split_payload(payload)
+        return ("lm", int(toks.shape[-1]),
+                self.new_tokens if nt is None else nt)
 
     def collate(self, payloads, pad_to: int) -> np.ndarray:
-        return _collate(payloads, pad_to, np.int32)
+        return _collate([self.split_payload(p)[0] for p in payloads],
+                        pad_to, np.int32)
 
     def make_forward(self, key) -> Callable:
         import contextlib
 
-        from repro.launch.serve import (greedy_token, make_decode_step,
-                                        widen_cache)
+        from repro.launch.serve import (greedy_token, grow_cache,
+                                        make_decode_step)
         from repro.models import transformer as T
 
         _, prompt_len, new_tokens = key
@@ -235,7 +263,7 @@ class LMRunner:
             with ctx:
                 logits, cache = T.prefill(params, cfg, plan, tokens=toks,
                                           qmode=qmode)
-                cache = widen_cache(cache, prompt_len, slots)
+                cache = grow_cache(cache, prompt_len, slots)
                 first = greedy_token(logits, cfg.vocab)
                 step = make_decode_step(params, cfg, plan, qmode)
                 (_, _, _), toks_out = jax.lax.scan(
@@ -256,7 +284,48 @@ def _pow2_ceil(n: int) -> int:
     return 1 << max(n - 1, 0).bit_length()
 
 
-class ServeEngine:
+def _seeded_rng(retry_rng) -> np.random.RandomState:
+    """Normalize the injectable backoff RNG: None -> seed 0, int -> that
+    seed, a RandomState -> used as-is.  Injection makes retry jitter a
+    pure function of the seed — load tests replay identical backoff
+    schedules instead of depending on global RNG state."""
+    if isinstance(retry_rng, np.random.RandomState):
+        return retry_rng
+    return np.random.RandomState(0 if retry_rng is None else retry_rng)
+
+
+class _SubmitRetryMixin:
+    """Shared bounded-backoff admission (requires ``submit``/``pump`` and a
+    ``self._rng`` seeded RandomState)."""
+
+    def submit_retry(self, payload, t_submit: float | None = None, *,
+                     attempts: int = 6, base_s: float = 1e-3,
+                     max_s: float = 0.25,
+                     sleep: Callable[[float], None] = time.sleep) -> int:
+        """:meth:`submit` with bounded exponential backoff on QueueFull.
+
+        Every open-loop caller used to hand-roll the shed/retry dance;
+        this is the one blessed version: pump (dispatching is the only
+        thing that relieves backpressure), sleep a jittered exponentially
+        growing delay (capped at ``max_s``), retry — and re-raise
+        QueueFull after ``attempts`` tries so overload still surfaces
+        instead of blocking forever.  ``t_submit`` keeps the coordinated-
+        omission contract: the request is charged from its true arrival
+        time however long admission took.
+        """
+        for a in range(attempts):
+            try:
+                return self.submit(payload, t_submit=t_submit)
+            except QueueFull:
+                if a == attempts - 1:
+                    raise
+                self.pump()
+                delay = min(base_s * (1 << a), max_s)
+                sleep(delay * (0.5 + self._rng.uniform()))  # jitter [0.5,1.5)
+        raise AssertionError("unreachable")
+
+
+class ServeEngine(_SubmitRetryMixin):
     """Coalesce independent requests into batched, sharded device dispatches.
 
     Parameters
@@ -268,11 +337,13 @@ class ServeEngine:
                       or None for the single-device ``jit`` fallback.
     max_pending:      queue bound; :meth:`submit` raises :class:`QueueFull`
                       beyond it (backpressure, DESIGN.md §7).
+    retry_rng:        seed (int) or ``np.random.RandomState`` for
+                      :meth:`submit_retry` backoff jitter; None seeds 0.
     """
 
     def __init__(self, runner, *, max_batch: int = 8,
                  flush_deadline_s: float = 0.005, mesh=None,
-                 max_pending: int = 4096,
+                 max_pending: int = 4096, retry_rng=None,
                  clock: Callable[[], float] = time.perf_counter):
         self.runner = runner
         self.mesh = mesh
@@ -282,7 +353,7 @@ class ServeEngine:
         self._ready: deque[Bucket] = deque()
         self._results: dict[int, Result] = {}
         self._fns: dict = {}
-        self._rng = np.random.RandomState(0)  # submit_retry backoff jitter
+        self._rng = _seeded_rng(retry_rng)    # submit_retry backoff jitter
         self._next_rid = 0
         self._n_data = 1 if mesh is None else int(np.prod(mesh.devices.shape))
         if mesh is not None:
@@ -322,32 +393,6 @@ class ServeEngine:
         if bucket is not None:
             self._ready.append(bucket)
         return rid
-
-    def submit_retry(self, payload, t_submit: float | None = None, *,
-                     attempts: int = 6, base_s: float = 1e-3,
-                     max_s: float = 0.25,
-                     sleep: Callable[[float], None] = time.sleep) -> int:
-        """:meth:`submit` with bounded exponential backoff on QueueFull.
-
-        Every open-loop caller used to hand-roll the shed/retry dance;
-        this is the one blessed version: pump (dispatching is the only
-        thing that relieves backpressure), sleep a jittered exponentially
-        growing delay (capped at ``max_s``), retry — and re-raise
-        QueueFull after ``attempts`` tries so overload still surfaces
-        instead of blocking forever.  ``t_submit`` keeps the coordinated-
-        omission contract: the request is charged from its true arrival
-        time however long admission took.
-        """
-        for a in range(attempts):
-            try:
-                return self.submit(payload, t_submit=t_submit)
-            except QueueFull:
-                if a == attempts - 1:
-                    raise
-                self.pump()
-                delay = min(base_s * (1 << a), max_s)
-                sleep(delay * (0.5 + self._rng.uniform()))  # jitter [0.5,1.5)
-        raise AssertionError("unreachable")
 
     def pump(self) -> None:
         """Dispatch full buckets plus any whose flush deadline expired."""
@@ -440,24 +485,510 @@ class ServeEngine:
         inflight = None
         for i in range(len(buckets)):
             bucket, padded, dev = staged
+            t_start = self.clock()
             out = self._executable(bucket.key, padded)(self._params, dev)
             staged = self._stage(buckets[i + 1]) if i + 1 < len(buckets) else None
             if inflight is not None:
                 self._harvest(*inflight)
-            inflight = (bucket, padded, out)
+            inflight = (bucket, padded, out, t_start)
         if inflight is not None:
             self._harvest(*inflight)
 
-    def _harvest(self, bucket: Bucket, padded: int, out) -> None:
+    def _harvest(self, bucket: Bucket, padded: int, out,
+                 t_start: float) -> None:
         host = np.asarray(out)  # blocks until this bucket's compute is done
         n = len(bucket.requests)
         t_done = self.clock()
         for req, val in zip(bucket.requests, self.runner.split(host, n)):
             self._results[req.rid] = Result(req.rid, val, req.t_submit,
-                                            t_done, n, padded)
+                                            t_done, n, padded,
+                                            t_start=t_start)
         self.stats["dispatches"] += 1
         self.stats["requests"] += n
         self.stats["padded_rows"] += padded - n
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching over a paged KV cache
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _Pending:
+    """A submitted request waiting for a slot + pages."""
+    rid: int
+    tokens: np.ndarray
+    new_tokens: int
+    t_submit: float
+
+
+@dataclasses.dataclass
+class _Slot:
+    """One in-flight request occupying a decode slot."""
+    rid: int
+    t_submit: float
+    t_start: float
+    tokens: np.ndarray      # prompt tokens (S_p,)
+    new_tokens: int
+    pages: list             # page indices owned by this request
+    pos: int                # next KV position to write (tokens inserted)
+    emitted: list           # generated tokens so far (first from prefill)
+    last_tok: int           # last generated token (next decode input)
+
+
+class ContinuousLMEngine(_SubmitRetryMixin):
+    """Step-granular continuous batching over a paged KV cache.
+
+    The bucket engine (:class:`ServeEngine` + :class:`LMRunner`) closes a
+    batch at dispatch: every co-batched request shares one (prompt-len,
+    horizon) shape, runs its full scan, and the batch retires together —
+    mixed lengths fragment into many small dispatches and short requests
+    wait on long ones (head-of-line blocking).  This engine keeps ONE
+    persistent in-flight batch of ``num_slots`` decode slots instead:
+
+    * **Admission at step granularity** — a waiting request joins any free
+      slot between decode steps.  Its KV pages (the full extent,
+      ``pages_needed(prompt + horizon)``) are reserved up front from a
+      :class:`~repro.core.kv_pages.PagePool`, so an admitted request can
+      always run to completion — no mid-flight eviction, no deadlock.
+      Admission is strictly FIFO (no skip-ahead past a too-big head): the
+      schedule stays a pure function of the submit order, which is what
+      the bit-identity and resume tests replay.
+    * **Chunked prefill insert** — the prompt streams into its pages in
+      fixed ``chunk``-token pieces at batch 1 (table sliced to the
+      admitting slot).  No bucket re-open, no contiguous re-padding:
+      ``launch/serve.grow_cache`` (ne ``widen_cache``) has no role here.
+    * **Mid-flight retirement** — a slot that reaches its horizon retires
+      between steps, frees its pages (FIFO reuse), and its slot admits the
+      next waiting request.  Requests with different horizons coexist in
+      one batch.
+    * **Bounded jit cache** — the model runs at exactly two shapes,
+      ``(1, chunk)`` prefill insert and ``(num_slots, 1)`` decode, plus
+      one page-reset program: three compiled programs total regardless of
+      the request mix (``self.program_shapes`` is the test surface).
+    * **Backpressure** — ``submit`` raises :class:`QueueFull` past
+      ``max_pending`` waiting requests; pool exhaustion defers admission
+      (requests queue) rather than failing, so QueueFull is the single
+      overload signal.  Oversized requests (``prompt + horizon`` beyond
+      ``max_seq`` or the whole pool) are rejected with ``ValueError`` at
+      submit — they could never be admitted.
+    * **Power-intermittency resilience** — with ``checkpoint_dir`` set,
+      the engine commits an epoch checkpoint every ``epoch_steps`` decode
+      steps: device page pools plus the entire host schedule (page table,
+      allocator free list, slot metadata, waiting queue, finished
+      results).  A :class:`~repro.resilience.faults.PowerLoss` /
+      ``DeviceDrop`` polled from ``faults`` wipes volatile state and
+      resumes from the last commit; determinism of the schedule makes the
+      resumed run bit-identical to an uninterrupted one.
+
+    Correctness contract: per-slot numerics are independent of batchmates.
+    The constructor forces ``act_scale_mode="row"`` for quantized serve
+    configs (per-row activation absmax) and the paged attention kernels
+    use per-slot q/k scales over ppos-masked gathers — a request's tokens
+    are bit-identical whether it decodes alone or in a full batch, under
+    the same chunk schedule.
+    """
+
+    def __init__(self, params, cfg, *, num_slots: int = 4,
+                 page_size: int = 16, num_pages: int = 64,
+                 max_seq: int | None = None, new_tokens: int = 16,
+                 chunk: int | None = None, plan=None, model_plan=None,
+                 qmode: str = "serve", max_pending: int = 4096,
+                 retry_rng=None, deadline_s: float | None = None,
+                 checkpoint_dir: str | None = None, epoch_steps: int = 4,
+                 faults=None, clock: Callable[[], float] = time.perf_counter):
+        from repro.configs import SINGLE
+        from repro.core.kv_pages import PagePool, pages_needed
+        from repro.models import transformer as T
+
+        if num_slots < 1:
+            raise ValueError(f"need at least one slot, got {num_slots}")
+        self.model_plan = model_plan
+        params = model_plan.params if model_plan is not None else params
+        quant = cfg.quant
+        if (qmode == "serve" and quant.engine != "fp" and quant.w_bits < 32
+                and quant.act_scale_mode != "row"):
+            # per-tensor activation absmax couples a row's quantization to
+            # its batchmates — continuous batching changes batchmates every
+            # step, so per-row scales are a correctness requirement here
+            cfg = dataclasses.replace(
+                cfg, quant=dataclasses.replace(quant, act_scale_mode="row"))
+        self.cfg = cfg
+        self.plan = plan or SINGLE
+        self.qmode = qmode
+        self.clock = clock
+        self.num_slots = num_slots
+        self.page_size = page_size
+        self.new_tokens = new_tokens
+        self.chunk = chunk or page_size
+        self.max_seq = max_seq or page_size * num_pages
+        self.max_pending = max_pending
+        self.deadline_s = deadline_s
+        self.faults = faults
+        self._rng = _seeded_rng(retry_rng)
+        self.table_pages = pages_needed(self.max_seq, page_size)
+        self.pool = PagePool(num_pages, page_size)
+        self._n_layers = len(cfg.blocks_pattern)
+        self._params = jax.device_put(params)
+        self._plan_fp = (None if model_plan is None
+                         else model_plan.fingerprint())
+
+        cache = T.init_paged_cache(cfg, self.plan, num_slots, num_pages,
+                                   page_size, self.table_pages)
+        self._pools = {k: cache["attn"][k] for k in ("pk", "pv", "ppos")}
+        self._table = np.full((num_slots, self.table_pages),
+                              self.pool.null_page, np.int32)
+        self._slots: list = [None] * num_slots
+        self._waiting: deque[_Pending] = deque()
+        self._results: dict[int, Result] = {}
+        self.dead_letters: list[dict] = []
+        self._next_rid = 0
+        self._step = 0              # decode steps executed (the work clock)
+        self.program_shapes: set = set()
+        self._run_fn = self._make_run()
+        self._reset_fn = jax.jit(
+            lambda ppos, pages: ppos.at[:, pages].set(-1, mode="drop"))
+        self.stats = dict(dispatches=0, requests=0, padded_rows=0, steps=0,
+                          admissions=0, retirements=0, prefill_chunks=0,
+                          dead_lettered=0, commits=0, power_losses=0)
+
+        self.epoch_steps = max(int(epoch_steps), 1)
+        self._last_commit: int | None = None
+        self.ckpt = None
+        if checkpoint_dir is not None:
+            from repro.train.checkpoint import Checkpointer
+            self.ckpt = Checkpointer(checkpoint_dir, keep=2,
+                                     async_save=False)
+            self._try_restore()  # resume a prior engine's in-flight state
+
+    # -- compiled programs ---------------------------------------------------
+
+    def _make_run(self) -> Callable:
+        import contextlib
+
+        from repro.models import transformer as T
+
+        cfg, plan, qmode = self.cfg, self.plan, self.qmode
+        model_plan, vocab = self.model_plan, self.cfg.vocab
+
+        def run(params, pools, table, toks, pos, valid):
+            ctx = (model_plan.activate() if model_plan is not None
+                   else contextlib.nullcontext())
+            with ctx:
+                cache = {"attn": dict(pools, table=table)}
+                logits, new_cache = T.paged_step(params, cache, toks, pos,
+                                                 valid, cfg, plan,
+                                                 qmode=qmode)
+            new_pools = {k: new_cache["attn"][k] for k in ("pk", "pv", "ppos")}
+            return logits[:, :, :vocab], new_pools
+
+        return jax.jit(run)
+
+    def _dispatch(self, table_rows: np.ndarray, toks: np.ndarray,
+                  pos: np.ndarray, valid: np.ndarray) -> np.ndarray:
+        """Run one paged model step; adopts the updated pools.  Returns
+        host logits (B, S, vocab)."""
+        b = table_rows.shape[0]
+        tbl = jnp.broadcast_to(
+            jnp.asarray(table_rows, jnp.int32)[None],
+            (self._n_layers, b, self.table_pages))
+        self.program_shapes.add(("run", b, toks.shape[1]))
+        logits, self._pools = self._run_fn(
+            self._params, self._pools, tbl,
+            jnp.asarray(toks, jnp.int32), jnp.asarray(pos, jnp.int32),
+            jnp.asarray(valid, jnp.int32))
+        self.stats["dispatches"] += 1
+        return np.asarray(logits)
+
+    def _reset_pages(self, pages: list) -> None:
+        """Mark freshly-allocated pages never-written (ppos = -1) so stale
+        positions from a prior tenant can't unmask its keys.  The page
+        list pads to a fixed width with the out-of-bounds drop index, so
+        this stays one compiled program."""
+        drop = self.pool.num_pages + 1
+        padded = np.full((self.table_pages,), drop, np.int32)
+        padded[: len(pages)] = pages
+        self.program_shapes.add(("reset",))
+        self._pools["ppos"] = self._reset_fn(self._pools["ppos"],
+                                             jnp.asarray(padded))
+
+    # -- queue side ----------------------------------------------------------
+
+    def _normalize(self, payload) -> tuple:
+        toks, nt = LMRunner.split_payload(payload)
+        toks = np.atleast_1d(toks).reshape(-1)
+        return toks, (self.new_tokens if nt is None else nt)
+
+    def submit(self, payload, t_submit: float | None = None) -> int:
+        """Enqueue one request (token array, or ``(tokens, new_tokens)``);
+        returns its rid.  Raises QueueFull past ``max_pending`` waiting
+        requests, ValueError for requests that could never fit."""
+        toks, nt = self._normalize(payload)
+        from repro.core.kv_pages import pages_needed
+        total = len(toks) + nt
+        if total > self.max_seq:
+            raise ValueError(f"prompt+horizon = {total} exceeds max_seq "
+                             f"= {self.max_seq}")
+        if pages_needed(total, self.page_size) > self.pool.num_pages:
+            raise ValueError(f"request needs "
+                             f"{pages_needed(total, self.page_size)} pages; "
+                             f"pool has {self.pool.num_pages}")
+        if nt < 1:
+            raise ValueError(f"new_tokens must be >= 1, got {nt}")
+        if len(toks) < 1:
+            raise ValueError("empty prompt")
+        if len(self._waiting) >= self.max_pending:
+            raise QueueFull(f"{self.max_pending} requests pending")
+        rid = self._next_rid
+        self._next_rid += 1
+        now = self.clock()
+        self._waiting.append(
+            _Pending(rid, toks, nt, now if t_submit is None else t_submit))
+        return rid
+
+    # -- scheduler -----------------------------------------------------------
+
+    def _free_slot(self):
+        for i, s in enumerate(self._slots):
+            if s is None:
+                return i
+        return None
+
+    def _admit(self) -> None:
+        """FIFO admission: fill free slots while the head request's full
+        page reservation fits.  A too-big head blocks the line (no
+        skip-ahead) — determinism over utilization."""
+        from repro.core.kv_pages import PoolExhausted, pages_needed
+
+        while self._waiting:
+            slot_i = self._free_slot()
+            if slot_i is None:
+                return
+            req = self._waiting[0]
+            need = pages_needed(len(req.tokens) + req.new_tokens,
+                                self.page_size)
+            try:
+                pages = self.pool.alloc(need)
+            except PoolExhausted:
+                return
+            self._waiting.popleft()
+            self._reset_pages(pages)
+            self._table[slot_i, :] = self.pool.null_page
+            self._table[slot_i, : len(pages)] = pages
+            s = _Slot(req.rid, req.t_submit, self.clock(), req.tokens,
+                      req.new_tokens, pages, 0, [], -1)
+            self._slots[slot_i] = s
+            self.stats["admissions"] += 1
+            self._prefill(slot_i, s)
+
+    def _prefill(self, slot_i: int, s: _Slot) -> None:
+        """Stream the prompt into this slot's pages in fixed-size chunks
+        (batch 1); the final chunk's logits yield the first token."""
+        c, s_p = self.chunk, len(s.tokens)
+        table_row = self._table[slot_i: slot_i + 1]
+        logits = None
+        for c0 in range(0, s_p, c):
+            if self.faults is not None:
+                ev = self.faults.poll("prefill", dt=1.0)
+                if ev is not None:
+                    self.faults.raise_for(ev)
+            piece = s.tokens[c0: c0 + c]
+            buf = np.zeros((1, c), np.int32)
+            buf[0, : len(piece)] = piece
+            logits = self._dispatch(table_row, buf,
+                                    np.asarray([c0], np.int32),
+                                    np.asarray([len(piece)], np.int32))
+            self.stats["prefill_chunks"] += 1
+        s.pos = s_p
+        first = int(np.argmax(logits[0, (s_p - 1) % c]))
+        s.emitted = [first]
+        s.last_tok = first
+        if s.new_tokens <= 1:
+            self._retire(slot_i)
+
+    def _decode_step(self) -> None:
+        """One step of the persistent in-flight batch: every active slot
+        inserts its last token and emits the next; finished slots retire
+        and free their pages mid-flight."""
+        active = [(i, s) for i, s in enumerate(self._slots) if s is not None]
+        if not active:
+            return
+        if self.faults is not None:
+            ev = self.faults.poll("decode", dt=1.0)
+            if ev is not None:
+                self.faults.raise_for(ev)
+        toks = np.zeros((self.num_slots, 1), np.int32)
+        pos = np.zeros((self.num_slots,), np.int32)
+        valid = np.zeros((self.num_slots,), np.int32)
+        for i, s in active:
+            toks[i, 0] = s.last_tok
+            pos[i] = s.pos
+            valid[i] = 1
+        logits = self._dispatch(self._table, toks, pos, valid)
+        self._step += 1
+        self.stats["steps"] += 1
+        self.stats["padded_rows"] += self.num_slots - len(active)
+        for i, s in active:
+            nxt = int(np.argmax(logits[i, 0]))
+            s.emitted.append(nxt)
+            s.last_tok = nxt
+            s.pos += 1
+            if len(s.emitted) >= s.new_tokens:
+                self._retire(i)
+
+    def _retire(self, slot_i: int) -> None:
+        s = self._slots[slot_i]
+        self._slots[slot_i] = None
+        self.pool.free(s.pages)
+        self._table[slot_i, :] = self.pool.null_page
+        self._results[s.rid] = Result(
+            s.rid, np.asarray(s.emitted[: s.new_tokens], np.int32),
+            s.t_submit, self.clock(), 1, 1, t_start=s.t_start)
+        self.stats["retirements"] += 1
+        self.stats["requests"] += 1
+
+    def _reap_deadlines(self) -> None:
+        if self.deadline_s is None:
+            return
+        now = self.clock()
+        for i, s in enumerate(self._slots):
+            if s is not None and now - s.t_submit > self.deadline_s:
+                self._slots[i] = None
+                self.pool.free(s.pages)
+                self._table[i, :] = self.pool.null_page
+                self.dead_letters.append(dict(
+                    rid=s.rid, t_submit=s.t_submit,
+                    emitted=list(s.emitted), reason="deadline"))
+                self.stats["dead_lettered"] += 1
+
+    # -- engine loop ---------------------------------------------------------
+
+    def pump(self) -> None:
+        """One scheduler tick: admit into free slots, commit a due epoch
+        checkpoint, reap deadline overruns, run one decode step.  A
+        kill-class fault wipes volatile state and resumes from the last
+        commit."""
+        from repro.resilience.faults import DeviceDrop, PowerLoss
+
+        try:
+            self._admit()
+            self._maybe_commit()
+            self._reap_deadlines()
+            self._decode_step()
+        except (PowerLoss, DeviceDrop):
+            self.stats["power_losses"] += 1
+            self._reboot()
+
+    def drain(self) -> list[Result]:
+        """Run the scheduler to idle; returns accumulated results by rid."""
+        while self._waiting or any(s is not None for s in self._slots):
+            self.pump()
+        out = [self._results[rid] for rid in sorted(self._results)]
+        self._results.clear()
+        return out
+
+    def serve(self, payloads) -> list[Result]:
+        """Closed-loop convenience: submit all, drain, results in order."""
+        for p in payloads:
+            while True:
+                try:
+                    self.submit(p)
+                    break
+                except QueueFull:
+                    self.pump()  # closed loop: the caller IS the backpressure
+        return self.drain()
+
+    def warm(self) -> "ContinuousLMEngine":
+        """Compile all three programs (prefill chunk, decode, page reset)
+        with one throwaway request."""
+        self.serve([(np.asarray([1], np.int32), 2)])
+        return self
+
+    # -- epoch checkpoints ---------------------------------------------------
+
+    def _maybe_commit(self) -> None:
+        if self.ckpt is None:
+            return
+        if (self._last_commit is not None
+                and self._step - self._last_commit < self.epoch_steps):
+            return
+        extra = dict(
+            step=self._step, next_rid=self._next_rid,
+            plan_fp=str(self._plan_fp), table=self._table.tolist(),
+            pool=self.pool.snapshot(),
+            slots=[None if s is None else dict(
+                rid=s.rid, t_submit=s.t_submit, t_start=s.t_start,
+                tokens=[int(t) for t in s.tokens], new_tokens=s.new_tokens,
+                pages=[int(p) for p in s.pages], pos=s.pos,
+                emitted=list(s.emitted), last_tok=s.last_tok)
+                for s in self._slots],
+            waiting=[dict(rid=p.rid, tokens=[int(t) for t in p.tokens],
+                          new_tokens=p.new_tokens, t_submit=p.t_submit)
+                     for p in self._waiting],
+            results={str(r.rid): dict(
+                value=[int(v) for v in r.value], t_submit=r.t_submit,
+                t_done=r.t_done, t_start=r.t_start)
+                for r in self._results.values()},
+            dead=list(self.dead_letters),
+        )
+        self.ckpt.save(self._step, self._pools, extra=extra, tag="cbe")
+        self._last_commit = self._step
+        self.stats["commits"] += 1
+
+    def _try_restore(self) -> bool:
+        step = self.ckpt.latest_step(tag="cbe")
+        if step is None:
+            return False
+        extra = self.ckpt.manifest(step, tag="cbe")["extra"]
+        if extra.get("plan_fp") != str(self._plan_fp):
+            return False  # foreign checkpoint: don't adopt another plan's KV
+        _, pools = self.ckpt.restore(self._pools, step=step, tag="cbe")
+        self._pools = jax.device_put(pools)
+        self._table = np.asarray(extra["table"], np.int32)
+        self.pool.restore(extra["pool"])
+        self._slots = [
+            None if d is None else _Slot(
+                d["rid"], d["t_submit"], d["t_start"],
+                np.asarray(d["tokens"], np.int32), d["new_tokens"],
+                list(d["pages"]), d["pos"], list(d["emitted"]),
+                d["last_tok"])
+            for d in extra["slots"]]
+        self._waiting = deque(
+            _Pending(d["rid"], np.asarray(d["tokens"], np.int32),
+                     d["new_tokens"], d["t_submit"])
+            for d in extra["waiting"])
+        self._results = {
+            int(rid): Result(int(rid), np.asarray(d["value"], np.int32),
+                             d["t_submit"], d["t_done"], 1, 1,
+                             t_start=d["t_start"])
+            for rid, d in extra["results"].items()}
+        self.dead_letters = list(extra["dead"])
+        self._step = int(extra["step"])
+        self._next_rid = int(extra["next_rid"])
+        self._last_commit = self._step
+        return True
+
+    def _reboot(self) -> None:
+        """Power came back: everything volatile (device pools, host
+        schedule) is gone.  Re-init cold, then resume from the last epoch
+        commit if there is one — requests admitted or submitted after it
+        are lost, exactly like a real brownout."""
+        from repro.core.kv_pages import PagePool
+        from repro.models import transformer as T
+
+        cache = T.init_paged_cache(self.cfg, self.plan, self.num_slots,
+                                   self.pool.num_pages, self.page_size,
+                                   self.table_pages)
+        self._pools = {k: cache["attn"][k] for k in ("pk", "pv", "ppos")}
+        self._table = np.full((self.num_slots, self.table_pages),
+                              self.pool.null_page, np.int32)
+        self._slots = [None] * self.num_slots
+        self._waiting.clear()
+        self._results = {}
+        self.pool = PagePool(self.pool.num_pages, self.page_size)
+        self._step = 0
+        self._last_commit = None
+        if self.ckpt is not None:
+            self._try_restore()
 
 
 # ---------------------------------------------------------------------------
@@ -468,10 +999,15 @@ class ServeEngine:
 def _percentile(xs, q: float) -> float:
     return float(np.percentile(np.asarray(xs), q)) if len(xs) else float("nan")
 
-def warm_engine(engine: ServeEngine, payloads) -> ServeEngine:
-    """Compile every padded bucket size the engine can dispatch (1, 2, 4,
-    ..., max_batch) so measurements see a long-lived server's steady state
-    — ragged final buckets hit the jit cache, not a cold compile."""
+def warm_engine(engine, payloads):
+    """Compile every program the engine can dispatch so measurements see a
+    long-lived server's steady state.  Bucket engines: every padded bucket
+    size (1, 2, 4, ..., max_batch) per shape key.  Continuous engines run
+    at fixed shapes, so one pass over the payload mix compiles everything
+    (ragged prompts exercise the same two programs)."""
+    if not hasattr(engine, "batcher"):  # ContinuousLMEngine
+        engine.serve(list(payloads))
+        return engine
     size = 1
     while True:
         engine.serve(payloads[: min(size, len(payloads))])
@@ -507,12 +1043,22 @@ def run_offered_load(engine: ServeEngine, payloads, rate_rps: float | None,
     results = engine.drain()
     wall = clock() - t0
     lats = [r.latency_s for r in results]
+    waits = [r.queue_wait_s for r in results]
+    svc = [r.service_s for r in results]
     return dict(
         n_requests=len(results),
         offered_rps=(round(rate_rps, 1) if rate_rps is not None else "inf"),
         achieved_rps=round(len(results) / wall, 2),
         p50_ms=round(_percentile(lats, 50) * 1e3, 2),
         p99_ms=round(_percentile(lats, 99) * 1e3, 2),
+        # end-to-end latency split: time waiting for a dispatch/slot vs
+        # time computing — under overload the queue component explodes
+        # while service stays flat, and the split says which engine knob
+        # (capacity vs batching) is the bottleneck
+        queue_p50_ms=round(_percentile(waits, 50) * 1e3, 2),
+        queue_p99_ms=round(_percentile(waits, 99) * 1e3, 2),
+        service_p50_ms=round(_percentile(svc, 50) * 1e3, 2),
+        service_p99_ms=round(_percentile(svc, 99) * 1e3, 2),
         dispatches=engine.stats["dispatches"],
         mean_batch=round(engine.stats["requests"]
                          / max(engine.stats["dispatches"], 1), 2),

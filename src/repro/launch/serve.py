@@ -34,13 +34,19 @@ from repro.models import transformer as T
 CACHE_SEQ_AXIS = {"k": 2, "v": 2, "pos": 2}
 
 
-def widen_cache(cache, prompt_len: int, slots: int):
+def grow_cache(cache, prompt_len: int, slots: int):
     """Grow a prefill cache to the decode horizon (position-preserving).
 
-    Only attention-style entries (dicts carrying k/v/pos) are widened, along
+    Only attention-style entries (dicts carrying k/v/pos) are grown, along
     their structural sequence axis; every other state tensor passes through
     untouched regardless of any size coincidence with ``prompt_len``.
     New k/v slots are zero-filled and their ``pos`` is -1 (empty).
+
+    This is the *contiguous* cache's growth path (bucket engine, single-
+    shot CLI).  The continuous engine
+    (``launch/engine.ContinuousLMEngine``) never grows or re-pads a cache:
+    KV lives in fixed-size pages and a request's extent is a page-table
+    row (``core/kv_pages``).
     """
     out = {}
     for kind, entry in cache.items():
@@ -61,6 +67,21 @@ def widen_cache(cache, prompt_len: int, slots: int):
                                    constant_values=-1 if key == "pos" else 0)
         out[kind] = widened
     return out
+
+
+def widen_cache(cache, prompt_len: int, slots: int):
+    """Deprecated alias for :func:`grow_cache` (one-release shim).
+
+    The name now distinguishes the contiguous growth path from the paged
+    path, which neither grows nor re-pads.  Delegates unchanged; removal
+    after one release.
+    """
+    import warnings
+    warnings.warn(
+        "widen_cache is deprecated; use grow_cache (contiguous caches) or "
+        "the paged serve path (ContinuousLMEngine), which never re-pads",
+        DeprecationWarning, stacklevel=2)
+    return grow_cache(cache, prompt_len, slots)
 
 
 def make_prefill(params, cfg, plan, qmode: str):
@@ -116,7 +137,7 @@ def make_generate(params, cfg, plan, qmode: str, prompt_len: int,
 
 def serve_once(params, cfg, plan, prompts, new_tokens: int, qmode: str,
                prefill_fn=None, generate_fn=None):
-    """One batched request: prefill -> widen -> scanned decode.
+    """One batched request: prefill -> grow -> scanned decode.
 
     Returns (tokens (B, S_d), wall seconds).  Pass pre-built ``prefill_fn``
     / ``generate_fn`` to measure warm (compile-free) latency.
@@ -127,7 +148,7 @@ def serve_once(params, cfg, plan, prompts, new_tokens: int, qmode: str,
                                                S_p, new_tokens)
     t0 = time.perf_counter()
     logits, cache = prefill_fn(prompts)
-    cache = widen_cache(cache, S_p, S_p + new_tokens)
+    cache = grow_cache(cache, S_p, S_p + new_tokens)
     first = greedy_token(logits, cfg.vocab)
     gen = generate_fn(cache, first)
     jax.block_until_ready(gen)
@@ -175,6 +196,51 @@ def run_throughput(params, cfg, qmode: str, args, model_plan=None) -> None:
         row = run_offered_load(eng, prompts,
                                rate_rps=mult * seq["achieved_rps"])
         print(f"offered {row['offered_rps']:>8} req/s: {json.dumps(row)}")
+
+
+def run_continuous(params, cfg, qmode: str, args, model_plan=None) -> None:
+    """Continuous-batching mode (``--continuous``): drive the paged-KV
+    step-granular engine with a mixed prompt/horizon request set and
+    report req/s + the queue/service latency split against the bucket
+    engine at the same capacity.  The benchmark-grade sweep lives in
+    ``benchmarks/bench_serve.py --continuous``."""
+    import json
+
+    import numpy as np
+
+    from repro.launch.engine import (ContinuousLMEngine, LMRunner,
+                                     ServeEngine, run_offered_load,
+                                     warm_engine)
+
+    rng = np.random.RandomState(0)
+    gens = (max(args.new_tokens // 2, 1), args.new_tokens,
+            args.new_tokens * 2)
+    payloads = [
+        (rng.randint(0, cfg.vocab,
+                     size=(int(rng.choice((args.prompt_len // 2 or 1,
+                                           args.prompt_len),)),))
+         .astype(np.int32), int(rng.choice(gens)))
+        for _ in range(args.requests)]
+
+    bucket = ServeEngine(
+        LMRunner(params, cfg, new_tokens=args.new_tokens, qmode=qmode,
+                 model_plan=model_plan),
+        max_batch=args.batch,
+        flush_deadline_s=args.flush_deadline_ms / 1e3)
+    cont = ContinuousLMEngine(
+        params, cfg, num_slots=args.slots, page_size=args.page_size,
+        num_pages=args.pages, new_tokens=args.new_tokens,
+        max_seq=args.prompt_len + 2 * args.new_tokens,
+        qmode=qmode, model_plan=model_plan)
+    rb = run_offered_load(warm_engine(bucket, payloads), payloads, None)
+    rc = run_offered_load(warm_engine(cont, payloads), payloads, None)
+    print(f"arch={cfg.name} requests={args.requests} mixed prompts/horizons "
+          f"slots={args.slots} pages={args.pages}x{args.page_size}")
+    print(f"bucket    : {json.dumps(rb)}")
+    print(f"continuous: {json.dumps(rc)} "
+          f"({rc['achieved_rps'] / max(rb['achieved_rps'], 1e-9):.2f}x)")
+    print(f"programs={sorted(cont.program_shapes)} "
+          f"pool={cont.pool.stats()}")
 
 
 def run_chaos(params, cfg, qmode: str, args, model_plan=None) -> None:
@@ -261,6 +327,17 @@ def main():
                          "independent requests through launch/engine.py "
                          "(data-parallel across devices) instead of one "
                          "batched call")
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous-batching mode: step-granular admission "
+                         "into a persistent decode batch over a paged KV "
+                         "cache (launch/engine.ContinuousLMEngine), compared "
+                         "against the bucket engine on a mixed-length mix")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="--continuous: persistent decode batch width")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="--continuous: tokens per KV page")
+    ap.add_argument("--pages", type=int, default=64,
+                    help="--continuous: KV page pool size")
     ap.add_argument("--requests", type=int, default=32,
                     help="--throughput: number of independent requests")
     ap.add_argument("--flush-deadline-ms", type=float, default=2.0,
@@ -314,6 +391,9 @@ def main():
         params = prequantize_params(params, cfg)
     if args.chaos_mtbf is not None:
         run_chaos(params, cfg, qmode, args, model_plan=model_plan)
+        return
+    if args.continuous:
+        run_continuous(params, cfg, qmode, args, model_plan=model_plan)
         return
     if args.throughput:
         run_throughput(params, cfg, qmode, args, model_plan=model_plan)

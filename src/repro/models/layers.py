@@ -54,10 +54,13 @@ def qdense(x: jax.Array, w, quant: QuantConfig, *,
     """
     if isinstance(w, dict):
         from repro.core.and_accum import quant_dense_forward_signed_pre
+        a_scale = _STATIC_ACT_SCALE[0]
+        if a_scale is None and quant.act_scale_mode == "row":
+            a_scale = "row"
         return quant_dense_forward_signed_pre(
             x, w["q"], w["s"], w["z"], quant.a_bits, quant.w_bits,
             engine=_signed_engine(x, w["q"].shape[-1], quant),
-            a_scale=_STATIC_ACT_SCALE[0])
+            a_scale=a_scale)
     if quant.engine == "fp" or quant.w_bits >= 32 or (
         role in ("first", "last") and quant.first_last_fp
     ):
@@ -68,6 +71,7 @@ def qdense(x: jax.Array, w, quant: QuantConfig, *,
         out = quant_dense_forward_signed(
             x2, w, quant.a_bits, quant.w_bits,
             engine=_signed_engine(x, w.shape[-1], quant),
+            a_scale_mode=quant.act_scale_mode,
         )
         return out.reshape(lead + (w.shape[-1],))
     aq = fake_quant_act_signed(x, quant.a_bits)
@@ -444,6 +448,7 @@ def resolve_attn_engine(cfg, *, seq_q: int, seq_kv: int, heads: int,
 
 def attention_fwd(p, x, cfg, plan, *, mode: str, pos_offset=0,
                   cache_k=None, cache_v=None, cache_pos=None,
+                  cache_table=None, valid_len=None,
                   window: Optional[int] = None, causal: Optional[bool] = None,
                   engine: Optional[str] = None, qmode: str = "train"):
     """Returns (out, (new_k, new_v, new_pos)) — cache parts None in train mode.
@@ -452,6 +457,13 @@ def attention_fwd(p, x, cfg, plan, *, mode: str, pos_offset=0,
     (full/chunked/banded/flash); ``None`` resolves it through
     :func:`resolve_attn_engine`.  Decode steps always run ``full`` (one
     query row — nothing to tile).
+
+    ``mode == 'paged'`` is the continuous-batching path: ``cache_k`` /
+    ``cache_v`` / ``cache_pos`` are reinterpreted as the shared page pools
+    (``pool_k/pool_v`` ``(NP+1, ps, Hkv, hd)``, ``ppos`` ``(NP+1, ps)``),
+    ``cache_table`` is the per-slot page table ``(B, P)``, ``pos_offset``
+    and ``valid_len`` are per-slot ``(B,)`` int arrays.  The same program
+    serves chunked prefill insert (S = chunk) and decode (S = 1).
     """
     B, S, d = x.shape
     hd = cfg.hd
@@ -465,6 +477,17 @@ def attention_fwd(p, x, cfg, plan, *, mode: str, pos_offset=0,
     if cfg.qk_norm:
         q = rms_norm(q, p["q_norm"])
         k = rms_norm(k, p["k_norm"])
+    if mode == "paged":
+        out, new_cache = _paged_attn_fwd(
+            q, k, v, cfg, pos_offset, valid_len,
+            cache_k, cache_v, cache_pos, cache_table,
+            causal=causal, window=window, qmode=qmode)
+        hm = _head_mask(cfg, plan, out.dtype)
+        if hm is not None:
+            out = out * hm[None, None, :, None]
+        out = qdense(out.reshape(B, S, Hp * hd), p["wo"], cfg.quant,
+                     mode=qmode)
+        return out, new_cache
     q_pos = pos_offset + jnp.arange(S)
     k_roped = rope(k, q_pos, cfg.rope_theta)
     q = rope(q, q_pos, cfg.rope_theta)
@@ -517,6 +540,56 @@ def attention_fwd(p, x, cfg, plan, *, mode: str, pos_offset=0,
         out = out * hm[None, None, :, None]
     out = qdense(out.reshape(B, S, Hp * hd), p["wo"], cfg.quant, mode=qmode)
     return out, new_cache
+
+
+def _paged_attn_fwd(q, k, v, cfg, pos_offset, valid_len,
+                    pool_k, pool_v, ppos, table, *,
+                    causal: bool, window: Optional[int], qmode: str):
+    """One paged step: scatter this chunk's K/V into the page pools, then
+    gather-attend each slot over its own page-table row.
+
+    Scatter targeting: a row's page is ``table[b, q_pos // ps]`` and its
+    in-page offset ``q_pos % ps``; rows beyond ``valid_len`` (and any
+    position past the table width) are redirected to index ``NP+1`` —
+    out of bounds for the ``(NP+1, ...)`` pools — so ``mode='drop'``
+    discards the write entirely.  The reserved null page (index NP) is
+    therefore never written and its ``ppos`` stays -1 forever, which is
+    what keeps table padding masked in the gather.
+    """
+    from repro.kernels.attn_flash import attn_paged
+    from repro.kernels.ops import AttnShape, select_attn_engine
+
+    B, S, Hkv, hd = k.shape
+    NP1, ps = ppos.shape
+    P = table.shape[1]
+    pos_offset = jnp.asarray(pos_offset, jnp.int32)
+    valid_len = jnp.asarray(valid_len, jnp.int32)
+    q_pos = pos_offset[:, None] + jnp.arange(S, dtype=jnp.int32)[None]  # (B,S)
+    ok = (jnp.arange(S, dtype=jnp.int32)[None] < valid_len[:, None]) \
+        & (q_pos >= 0) & (q_pos < P * ps)
+    k_roped = rope(k, q_pos, cfg.rope_theta)
+    q = rope(q, q_pos, cfg.rope_theta)
+    page_idx = jnp.take_along_axis(
+        table, jnp.clip(q_pos // ps, 0, P - 1), axis=1)
+    page_idx = jnp.where(ok, page_idx, NP1)  # OOB sentinel -> dropped write
+    off = jnp.where(ok, q_pos % ps, 0)
+    new_pk = pool_k.at[page_idx, off].set(k_roped, mode="drop")
+    new_pv = pool_v.at[page_idx, off].set(v, mode="drop")
+    new_ppos = ppos.at[page_idx, off].set(q_pos, mode="drop")
+
+    attn = AttnShape(
+        seq_q=S, seq_kv=P * ps, heads=q.shape[2], head_dim=hd,
+        causal=bool(causal), window=window,
+        quantized=attn_quantized(cfg.quant, qmode), page_size=ps)
+    eng = select_attn_engine(attn)
+    if eng != "paged":
+        raise ValueError(
+            f"paged attention geometry resolved to engine {eng!r}")
+    out = attn_paged(
+        q, new_pk, new_pv, new_ppos, table, jnp.where(ok, q_pos, -1),
+        causal=bool(causal), window=window, quantized=attn.quantized,
+        bits=min(cfg.quant.a_bits, 8), n_q_heads=cfg.n_heads)
+    return out.astype(q.dtype), (new_pk, new_pv, new_ppos)
 
 
 # ---------------------------------------------------------------------------

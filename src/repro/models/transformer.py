@@ -155,6 +155,39 @@ def init_cache(cfg, plan, batch: int, max_len: int, dtype=None):
     return cache
 
 
+def init_paged_cache(cfg, plan, num_slots: int, num_pages: int,
+                     page_size: int, table_pages: int, dtype=None):
+    """Paged decode cache (continuous-batching serve path).
+
+    Layout per layer: shared page pools ``pk``/``pv``
+    ``(n, NP+1, page_size, Hkv, hd)`` — NP allocatable pages plus the
+    reserved null page (index NP, never written) — a position buffer
+    ``ppos (n, NP+1, page_size)`` initialized to -1 (= never written), and
+    the per-slot page table ``table (n, num_slots, table_pages)``
+    initialized to the null page.  The table is logically one host-side
+    object (``core.kv_pages``); it is replicated per layer so the cache
+    pytree stays uniform under the superblock scan.
+
+    Only the pure-attention pattern is supported: recurrent/rwkv state is
+    not page-granular, and rolling-window layers would need a second
+    allocator policy.
+    """
+    bad = [k for k in set(cfg.blocks_pattern) if k != "attn"]
+    if bad:
+        raise ValueError(
+            f"paged KV cache requires a pure-'attn' block pattern; "
+            f"got kinds {sorted(bad)}")
+    dtype = dtype or cfg.compute_dtype
+    n = len(cfg.blocks_pattern)
+    hd, Hkv = cfg.hd, cfg.n_kv_heads
+    return {"attn": dict(
+        pk=jnp.zeros((n, num_pages + 1, page_size, Hkv, hd), dtype),
+        pv=jnp.zeros((n, num_pages + 1, page_size, Hkv, hd), dtype),
+        ppos=jnp.full((n, num_pages + 1, page_size), -1, jnp.int32),
+        table=jnp.full((n, num_slots, table_pages), num_pages, jnp.int32),
+    )}
+
+
 def cache_axes(cfg, plan):
     """Logical axes for the cache pytree (mirrors init_cache)."""
     ax: dict[str, Any] = {}
@@ -182,10 +215,27 @@ def cache_axes(cfg, plan):
 # Forward
 # ---------------------------------------------------------------------------
 
-def _run_block(kind, p, h, cfg, plan, *, mode, pos_offset, cache, qmode):
+def _run_block(kind, p, h, cfg, plan, *, mode, pos_offset, cache, qmode,
+               valid_len=None):
     """Returns (h, new_cache_for_block)."""
     if kind in ("attn", "moe", "attn_local"):
         window = cfg.window if kind == "attn_local" else None
+        if cache and "pk" in cache:  # paged pools, not contiguous k/v/pos
+            att, (npk, npv, nppos) = attention_fwd(
+                p["attn"], h, cfg, plan, mode="paged",
+                pos_offset=pos_offset, cache_k=cache["pk"],
+                cache_v=cache["pv"], cache_pos=cache["ppos"],
+                cache_table=cache["table"], valid_len=valid_len,
+                window=window, qmode=qmode)
+            h = h + att
+            if kind == "moe":
+                y, aux = moe_fwd(p["moe"], h, cfg)
+                h = h + y
+            else:
+                aux = jnp.zeros((), jnp.float32)
+                h = h + mlp_fwd(p["mlp"], h, cfg, qmode=qmode)
+            return h, dict(pk=npk, pv=npv, ppos=nppos,
+                           table=cache["table"]), aux
         ck = cache["k"] if cache else None
         cv = cache["v"] if cache else None
         cp = cache["pos"] if cache else None
@@ -225,7 +275,7 @@ def _group_stacked(tree, n_super: int, c: int):
 
 
 def run_blocks(params, h, cfg, plan, *, mode="train", pos_offset=0, cache=None,
-               qmode="train"):
+               qmode="train", valid_len=None):
     """Superblock-scanned layer stack. Returns (h, new_cache, aux_sum)."""
     pattern = tuple(cfg.pattern)
     period = len(pattern)
@@ -236,7 +286,7 @@ def run_blocks(params, h, cfg, plan, *, mode="train", pos_offset=0, cache=None,
     if not cfg.scan_layers:
         return _run_blocks_unrolled(params, h, cfg, plan, mode=mode,
                                     pos_offset=pos_offset, cache=cache,
-                                    qmode=qmode)
+                                    qmode=qmode, valid_len=valid_len)
 
     blocks = params["blocks"]
     grouped, rem_params = {}, {}
@@ -264,7 +314,7 @@ def run_blocks(params, h, cfg, plan, *, mode="train", pos_offset=0, cache=None,
                    if cache is not None and kind in cache else None)
             h, cu, a = _run_block(kind, p_i, h, cfg, plan, mode=mode,
                                   pos_offset=pos_offset, cache=c_i,
-                                  qmode=qmode)
+                                  qmode=qmode, valid_len=valid_len)
             h = _constrain_batch(h, cfg, plan)
             if cu is not None:
                 new_c[kind].append(cu)
@@ -290,7 +340,7 @@ def run_blocks(params, h, cfg, plan, *, mode="train", pos_offset=0, cache=None,
                if cache is not None and kind in cache else None)
         h, cu, a = _run_block(kind, p_i, h, cfg, plan, mode=mode,
                               pos_offset=pos_offset, cache=c_i,
-                              qmode=qmode)
+                              qmode=qmode, valid_len=valid_len)
         aux = aux + a
         if cu is not None:
             rem_new[kind].append(cu)
@@ -334,7 +384,7 @@ def _constrain_batch(h, cfg, plan):
 
 
 def _run_blocks_unrolled(params, h, cfg, plan, *, mode, pos_offset, cache,
-                         qmode):
+                         qmode, valid_len=None):
     """Python-loop layer stack (analysis mode): every layer's ops appear
     explicitly in the HLO so cost_analysis trip-counts are exact."""
     blocks = params["blocks"]
@@ -350,7 +400,7 @@ def _run_blocks_unrolled(params, h, cfg, plan, *, mode, pos_offset, cache,
         def call(p_b, h_b, _kind=kind, _c=c_i):
             return _run_block(_kind, p_b, h_b, cfg, plan, mode=mode,
                               pos_offset=pos_offset, cache=_c,
-                              qmode=qmode)
+                              qmode=qmode, valid_len=valid_len)
 
         if cfg.remat and mode == "train":
             call = jax.checkpoint(call, prevent_cse=cfg.remat_prevent_cse)
@@ -401,14 +451,14 @@ def unembed(params, cfg, h, plan=None):
 
 def forward(params, cfg, plan, *, tokens=None, patch_embeds=None,
             frame_feats=None, mode="train", cache=None, pos_offset=0,
-            qmode="train"):
+            qmode="train", valid_len=None):
     """Full forward. Returns (logits, new_cache, aux)."""
     h = embed_inputs(params, cfg, tokens, patch_embeds, frame_feats)
     h = h.astype(cfg.compute_dtype)
     h = _constrain_batch(h, cfg, plan)
     h, new_cache, aux = run_blocks(params, h, cfg, plan, mode=mode,
                                    pos_offset=pos_offset, cache=cache,
-                                   qmode=qmode)
+                                   qmode=qmode, valid_len=valid_len)
     logits = unembed(params, cfg, h, plan)
     return logits, new_cache, aux
 
@@ -467,4 +517,22 @@ def decode_step(params, cache, token, pos, cfg, plan, qmode="train"):
     logits, new_cache, _ = forward(params, cfg, plan, tokens=token,
                                    mode="decode", cache=cache,
                                    pos_offset=pos, qmode=qmode)
+    return logits, new_cache
+
+
+def paged_step(params, cache, tokens, pos, valid_len, cfg, plan,
+               qmode="serve"):
+    """One paged step over the in-flight slot batch.
+
+    tokens (B, S) int32; pos (B,) per-slot start positions; valid_len (B,)
+    rows of each slot that are real (0 = slot idle this step).  The
+    continuous engine calls this at exactly two shapes — (1, chunk) for a
+    prefill-chunk insert (table sliced to the admitting slot) and
+    (num_slots, 1) for a decode step — so its whole model jit cache is two
+    programs regardless of the request mix.  -> (logits, cache).
+    """
+    logits, new_cache, _ = forward(params, cfg, plan, tokens=tokens,
+                                   mode="paged", cache=cache,
+                                   pos_offset=pos, valid_len=valid_len,
+                                   qmode=qmode)
     return logits, new_cache

@@ -84,8 +84,8 @@ class EpochLMRunner(LMRunner):
                 else contextlib.nullcontext())
 
     def make_prefill_fn(self, key):
-        """(params, toks (B, S_p)) -> (widened cache, tok (B,1), pos)."""
-        from repro.launch.serve import greedy_token, widen_cache
+        """(params, toks (B, S_p)) -> (grown cache, tok (B,1), pos)."""
+        from repro.launch.serve import greedy_token, grow_cache
         from repro.models import transformer as T
 
         _, prompt_len, new_tokens = key
@@ -96,7 +96,7 @@ class EpochLMRunner(LMRunner):
             with self._ctx():
                 logits, cache = T.prefill(params, cfg, plan, tokens=toks,
                                           qmode=qmode)
-                cache = widen_cache(cache, prompt_len, slots)
+                cache = grow_cache(cache, prompt_len, slots)
                 first = greedy_token(logits, cfg.vocab)
             return cache, first, jnp.asarray(prompt_len, jnp.int32)
 

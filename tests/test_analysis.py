@@ -1,4 +1,4 @@
-"""Static verification subsystem: plan prover (PV101-PV107) + repro-lint
+"""Static verification subsystem: plan prover (PV101-PV108) + repro-lint
 (RL001-RL005).
 
 Pins the DESIGN.md §12 contracts: golden plans prove clean, adversarial
@@ -145,6 +145,45 @@ def test_orphan_dense_table_entry_rejected_pv104(lm_plan):
     violations = verify_plan(dataclasses.replace(lm_plan,
                                                  dense_table=table))
     assert any(v.rule == "PV104" and "orphan" in v.message
+               for v in violations)
+
+
+def test_paged_lm_plan_verifies_clean_pv108(lm_plan):
+    """A paged geometry declared at compile time (page_size, kv_pages)
+    adds a 10-tuple attn_table verdict that proves PV108 clean."""
+    cfg = dataclasses.replace(
+        all_configs()["smollm-360m"].smoke(
+            n_layers=2, d_model=64, n_heads=2, n_kv_heads=1, d_ff=128,
+            vocab=64, head_dim=32),
+        quant=dataclasses.replace(W1A8, engine="auto"))
+    params, _ = T.init_lm(jax.random.PRNGKey(0), cfg, SINGLE)
+    plan = compile_lm(params, cfg, backend="cpu", batch_hints=(1, 4),
+                      prompt_len=8, page_size=4, kv_pages=8)
+    assert verify_plan(plan) == []
+    paged_keys = [k for k in plan.attn_table if len(k) == 10]
+    assert paged_keys and all(k[8] == 4 and k[9] == 32 for k in paged_keys)
+
+
+def test_paged_nontiling_page_size_rejected_pv108(lm_plan):
+    """page_size that does not tile the table extent: the paged program's
+    whole-page table cannot represent the geometry."""
+    table = dict(lm_plan.attn_table)
+    table[("attn", 1, 2, 32, True, 0, True, "cpu", 3, 32)] = "paged"
+    violations = verify_plan(dataclasses.replace(lm_plan,
+                                                 attn_table=table))
+    assert any(v.rule == "PV108" and "tile" in v.message
+               for v in violations)
+
+
+def test_paged_int32_index_overflow_rejected_pv108(lm_plan):
+    """A pool whose flat KV index exceeds int32 at the largest batch hint
+    would corrupt the gather at serve time — rejected at compile."""
+    table = dict(lm_plan.attn_table)
+    big = 1 << 25                          # 2 * big * 2 * 32 = 2^32 > int32
+    table[("attn", 1, 2, 32, True, 0, True, "cpu", 4, big)] = "paged"
+    violations = verify_plan(dataclasses.replace(lm_plan,
+                                                 attn_table=table))
+    assert any(v.rule == "PV108" and "int32" in v.message
                for v in violations)
 
 

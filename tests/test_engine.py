@@ -264,11 +264,48 @@ def test_flush_deadline_dispatches_partial_bucket():
     assert 0 in eng._results and eng._results[0].batch == 1
 
 
+def test_submit_retry_jitter_is_seeded_and_injectable():
+    """Backoff jitter comes from an engine-owned seeded RNG: two engines
+    built with the same retry_rng seed sleep the identical sequence, a
+    different seed diverges, and a RandomState instance passes through —
+    retry timing is reproducible, never ambient-global."""
+    def delays(retry_rng):
+        eng = ServeEngine(CNNRunner(SERVE_PARAMS, SPEC, W1A4), max_batch=8,
+                          max_pending=1, flush_deadline_s=1e9,
+                          retry_rng=retry_rng)
+        eng.submit(IMGS[0])
+        slept = []
+        with pytest.raises(QueueFull):
+            eng.submit_retry(IMGS[1], attempts=4, base_s=0.001, max_s=0.008,
+                             sleep=slept.append)
+        return slept
+
+    assert delays(7) == delays(7)
+    assert delays(7) != delays(8)
+    assert delays(np.random.RandomState(7)) == delays(7)
+
+
 def test_offered_load_closed_loop_counts():
     eng = ServeEngine(CNNRunner(SERVE_PARAMS, SPEC, W1A4), max_batch=4)
     row = run_offered_load(eng, IMGS, rate_rps=None)
     assert row["n_requests"] == len(IMGS)
     assert row["achieved_rps"] > 0 and row["p99_ms"] >= row["p50_ms"]
+
+
+def test_offered_load_splits_queue_wait_from_service():
+    """run_offered_load decomposes latency: queue-wait (submit -> dispatch)
+    and service (dispatch -> done) are reported separately and their p50s
+    compose to about the end-to-end p50 for a serial engine."""
+    eng = ServeEngine(CNNRunner(SERVE_PARAMS, SPEC, W1A4), max_batch=2)
+    row = run_offered_load(eng, IMGS, rate_rps=None)
+    for k in ("queue_p50_ms", "queue_p99_ms", "service_p50_ms",
+              "service_p99_ms"):
+        assert k in row and np.isfinite(row[k]) and row[k] >= 0
+    assert row["queue_p99_ms"] >= row["queue_p50_ms"]
+    assert row["service_p99_ms"] >= row["service_p50_ms"]
+    # components never exceed the end-to-end envelope
+    assert row["queue_p50_ms"] <= row["p99_ms"]
+    assert row["service_p50_ms"] <= row["p99_ms"]
 
 
 # ---------------------------------------------------------------------------
@@ -361,7 +398,8 @@ def test_widen_cache_ignores_size_coincidences():
     toks = jax.random.randint(jax.random.PRNGKey(1), (2, S_p), 0, cfg.vocab)
     logits, cache = T.prefill(params, cfg, SINGLE, tokens=toks)
     assert cache["rec"]["h"].shape[2] == S_p  # the trap is armed
-    w = widen_cache(cache, S_p, S_p + 8)
+    with pytest.warns(DeprecationWarning, match="grow_cache"):
+        w = widen_cache(cache, S_p, S_p + 8)
     # recurrent state: untouched
     assert w["rec"]["h"].shape == cache["rec"]["h"].shape
     assert w["rec"]["conv"].shape == cache["rec"]["conv"].shape
@@ -389,7 +427,8 @@ def test_widen_cache_dense_head_dim_collision():
     toks = jax.random.randint(jax.random.PRNGKey(1), (2, S_p), 0, cfg.vocab)
     _, cache = T.prefill(params, cfg, SINGLE, tokens=toks)
     assert cache["attn"]["k"].shape[2:] == (S_p, S_p, S_p)
-    w = widen_cache(cache, S_p, S_p + 3)
+    with pytest.warns(DeprecationWarning, match="grow_cache"):
+        w = widen_cache(cache, S_p, S_p + 3)
     assert w["attn"]["k"].shape == cache["attn"]["k"].shape[:2] + (S_p + 3,
                                                                    S_p, S_p)
 

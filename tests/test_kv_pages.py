@@ -1,0 +1,257 @@
+"""Paged KV cache: allocator (core/kv_pages.py) and the continuous
+batching scheduler built on it (launch/engine.ContinuousLMEngine,
+DESIGN.md §13).
+
+Allocator contract: fixed-size block pool with all-or-nothing alloc,
+FIFO reuse (deterministic page placement for replay), and a snapshot/
+restore pair that preserves free-list ORDER so a resumed engine
+allocates the same pages an uninterrupted one would.
+
+Scheduler contract: step-granular admission/retirement is invisible to
+numerics — every request's tokens are bit-identical to running it alone
+through the same engine — while the jit cache stays at exactly three
+programs regardless of the request mix.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import SINGLE, all_configs
+from repro.core.kv_pages import PagePool, PoolExhausted, pages_needed
+from repro.core.quant import PAPER_CONFIGS
+from repro.launch.engine import ContinuousLMEngine, QueueFull
+from repro.models import transformer as T
+
+
+# ---------------------------------------------------------------------------
+# pages_needed: ceil-div with a ragged final page
+# ---------------------------------------------------------------------------
+
+def test_pages_needed_ragged():
+    assert pages_needed(0, 16) == 0
+    assert pages_needed(-3, 16) == 0
+    assert pages_needed(1, 16) == 1
+    assert pages_needed(16, 16) == 1
+    assert pages_needed(17, 16) == 2      # one token spills to a new page
+    assert pages_needed(33, 16) == 3
+
+
+# ---------------------------------------------------------------------------
+# PagePool: all-or-nothing alloc, ownership-checked free, FIFO reuse
+# ---------------------------------------------------------------------------
+
+def test_pool_exhaustion_allocates_nothing():
+    p = PagePool(4, 16)
+    got = p.alloc(3)
+    with pytest.raises(PoolExhausted):
+        p.alloc(2)                         # only 1 free: all-or-nothing
+    assert p.free_pages == 1               # the failed alloc took nothing
+    assert p.stats()["allocs"] == 3
+    p.free(got)
+    assert p.free_pages == 4 and p.used_pages == 0
+
+
+def test_pool_free_rejects_foreign_and_double():
+    p = PagePool(4, 16)
+    got = p.alloc(2)
+    with pytest.raises(ValueError):
+        p.free([got[0], 99])               # foreign page: nothing freed
+    assert p.used_pages == 2
+    p.free(got)
+    with pytest.raises(ValueError):
+        p.free([got[0]])                   # double free
+    with pytest.raises(ValueError):
+        p.free([p.null_page])              # the null page is never owned
+
+
+def test_pool_fifo_reuse_order():
+    """Freed pages recycle in free order — page placement is a pure
+    function of the alloc/free history, which resume replay depends on."""
+    p = PagePool(6, 8)
+    a = p.alloc(3)
+    b = p.alloc(3)
+    p.free(b)
+    p.free(a)
+    assert p.alloc(6) == b + a             # FIFO: b's pages come back first
+
+
+def test_pool_stats_and_capacity():
+    p = PagePool(8, 4)
+    assert p.capacity_tokens() == 32 and p.null_page == 8
+    assert p.can_fit(32) and not p.can_fit(33)
+    got = p.alloc(5)
+    st = p.stats()
+    assert st["used_pages"] == 5 and st["high_water"] == 5
+    p.free(got[:2])
+    p.alloc(1)
+    assert p.stats()["high_water"] == 5    # high-water never decays
+
+
+def test_pool_snapshot_restore_roundtrip_preserves_order():
+    p = PagePool(6, 8)
+    a = p.alloc(2)
+    b = p.alloc(2)
+    p.free(a)                              # free list now: [4, 5, a0, a1]
+    snap = p.snapshot()
+    q = PagePool(6, 8)
+    q.alloc(6)                             # scramble the fresh pool
+    q.restore(snap)
+    assert q.used_pages == p.used_pages == 2
+    assert q.alloc(4) == p.alloc(4)        # identical reuse order
+    with pytest.raises(ValueError):
+        PagePool(6, 4).restore(snap)       # page_size mismatch
+    with pytest.raises(ValueError):
+        PagePool(8, 8).restore(snap)       # num_pages mismatch
+
+
+# ---------------------------------------------------------------------------
+# ContinuousLMEngine scheduler (smoke LM, w1a8 serve quantization)
+# ---------------------------------------------------------------------------
+
+def _lm_setup():
+    cfg = dataclasses.replace(
+        all_configs()["smollm-360m"].smoke(
+            n_layers=2, d_model=64, n_heads=2, n_kv_heads=1, d_ff=128,
+            vocab=64, head_dim=32),
+        quant=PAPER_CONFIGS["w1a8"])
+    params, _ = T.init_lm(jax.random.PRNGKey(0), cfg, SINGLE)
+    return cfg, params
+
+
+CFG, PARAMS = _lm_setup()
+
+
+def _engine(**kw):
+    kw.setdefault("num_slots", 2)
+    kw.setdefault("page_size", 4)
+    kw.setdefault("num_pages", 16)
+    kw.setdefault("max_seq", 16)
+    return ContinuousLMEngine(PARAMS, CFG, **kw)
+
+
+def _payloads(n, seed=0, lens=(3, 5, 8), gens=(2, 4, 6)):
+    rng = np.random.RandomState(seed)
+    return [(rng.randint(0, CFG.vocab, rng.choice(lens)).astype(np.int32),
+             int(rng.choice(gens))) for _ in range(n)]
+
+
+def test_submit_rejects_impossible_requests():
+    eng = _engine()
+    with pytest.raises(ValueError):
+        eng.submit((np.arange(15, dtype=np.int32), 4))   # beyond max_seq
+    with pytest.raises(ValueError):
+        eng.submit((np.asarray([1], np.int32), 0))       # no horizon
+    with pytest.raises(ValueError):
+        eng.submit((np.zeros(0, np.int32), 4))           # empty prompt
+
+
+def test_queue_full_at_max_pending():
+    eng = _engine(max_pending=2)
+    eng.submit((np.asarray([1, 2], np.int32), 2))
+    eng.submit((np.asarray([3], np.int32), 2))
+    with pytest.raises(QueueFull):
+        eng.submit((np.asarray([4], np.int32), 2))
+    assert len(eng.drain()) == 2           # nothing was lost
+
+
+def test_pool_exhaustion_defers_admission_then_completes():
+    """A pool too small for two in-flight requests serializes them:
+    admission waits for pages (no failure, no deadlock), every request
+    still completes, and every page returns to the pool."""
+    eng = _engine(num_slots=2, num_pages=4, max_seq=16)   # 16-token pool
+    res = eng.serve([(np.arange(1, 9, dtype=np.int32), 8),   # 4 pages: all
+                     (np.arange(1, 9, dtype=np.int32), 8)])  # of them
+    assert len(res) == 2 and all(len(r.value) == 8 for r in res)
+    assert eng.pool.used_pages == 0
+    st = eng.pool.stats()
+    assert st["allocs"] == st["frees"] == 8
+    assert st["high_water"] == 4           # never co-resident
+
+
+def test_pages_released_on_retirement():
+    eng = _engine()
+    eng.serve(_payloads(6))
+    assert eng.pool.used_pages == 0
+    assert eng.pool.stats()["allocs"] == eng.pool.stats()["frees"] > 0
+    assert (eng._table == eng.pool.null_page).all()
+
+
+def test_pages_released_on_dead_letter():
+    """A deadline overrun frees its pages and lands in dead_letters —
+    the slot is reusable, the tokens are not silently dropped."""
+    t = [0.0]
+    eng = _engine(deadline_s=1.0, clock=lambda: t[0])
+    eng.submit((np.asarray([1, 2, 3], np.int32), 12), t_submit=0.0)
+    eng.pump()                             # admit + prefill + first step
+    assert eng._slots[0] is not None
+    t[0] = 2.0                             # blow the deadline
+    eng.pump()
+    assert eng._slots[0] is None and eng.pool.used_pages == 0
+    assert len(eng.dead_letters) == 1
+    dl = eng.dead_letters[0]
+    assert dl["reason"] == "deadline" and len(dl["emitted"]) >= 1
+    assert eng.stats["dead_lettered"] == 1
+
+
+def test_continuous_bit_identical_to_sequential():
+    """Step-granular join/leave is numerically invisible: a request's
+    tokens match running it alone through the same engine class."""
+    payloads = _payloads(8, seed=3)
+    batched = _engine(num_slots=3, num_pages=16).serve(payloads)
+    seq_eng = _engine(num_slots=3, num_pages=16)
+    for p, r in zip(payloads, batched):
+        [ref] = seq_eng.serve([p])
+        np.testing.assert_array_equal(r.value, ref.value)
+
+
+def test_program_count_bounded_under_mixed_replay():
+    """64 mixed-length requests compile exactly three programs: the
+    (1, chunk) prefill insert, the (num_slots, 1) decode step, and the
+    page reset — the jit cache is bounded by geometry, not request mix."""
+    eng = _engine(num_slots=2, num_pages=16)
+    res = eng.serve(_payloads(64, seed=7))
+    assert len(res) == 64
+    assert eng.program_shapes == {
+        ("reset",), ("run", 1, eng.chunk), ("run", eng.num_slots, 1)}
+
+
+def test_fault_resume_bit_identical(tmp_path):
+    """Two scripted power losses mid-decode: the engine reboots from its
+    epoch checkpoints and the final token streams are bit-identical to a
+    fault-free run."""
+    from repro.resilience.faults import FaultPlan
+
+    payloads = _payloads(6, seed=5)
+    ref = _engine().serve(payloads)
+    faults = FaultPlan.scripted([("decode", 3, "power_loss"),
+                                 ("decode", 9, "power_loss")])
+    eng = _engine(checkpoint_dir=str(tmp_path), epoch_steps=2,
+                  faults=faults)
+    res = eng.serve(payloads)
+    assert eng.stats["power_losses"] == 2 and eng.stats["commits"] >= 2
+    assert [r.rid for r in res] == [r.rid for r in ref]
+    for a, b in zip(res, ref):
+        np.testing.assert_array_equal(a.value, b.value)
+
+
+def test_cross_process_resume_from_checkpoint(tmp_path):
+    """A second engine constructed on the same checkpoint_dir adopts the
+    first engine's in-flight state (pools, page table, allocator free
+    list, queue) and drains to bit-identical results."""
+    payloads = _payloads(5, seed=11, gens=(6, 8))
+    ref = _engine().serve(payloads)
+
+    first = _engine(checkpoint_dir=str(tmp_path), epoch_steps=1)
+    for p in payloads:
+        first.submit(p)
+    for _ in range(3):
+        first.pump()                       # die mid-flight (after a commit)
+    assert any(s is not None for s in first._slots) or first._waiting
+
+    second = _engine(checkpoint_dir=str(tmp_path), epoch_steps=1)
+    res = second.drain()
+    got = {r.rid: r.value for r in res}
+    for r in ref:
+        np.testing.assert_array_equal(got[r.rid], r.value)

@@ -105,8 +105,8 @@ def test_serve_prefill_then_decode_consistency():
     B, S_p, S_d = 2, 8, 4
     toks = jax.random.randint(key, (B, S_p + S_d), 0, cfg.vocab)
     logits_p, cache = T.prefill(params, cfg, SINGLE, tokens=toks[:, :S_p])
-    from repro.launch.serve import widen_cache
-    cache = widen_cache(cache, S_p, S_p + S_d)
+    from repro.launch.serve import grow_cache
+    cache = grow_cache(cache, S_p, S_p + S_d)
     outs = []
     for t in range(S_d):
         lg, cache = T.decode_step(params, cache, toks[:, S_p + t: S_p + t + 1],
