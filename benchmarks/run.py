@@ -41,6 +41,10 @@ def main() -> None:
         from bench_resilience import resilience_rows
         return resilience_rows(fast=fast)
 
+    def fleet_study(fast=False):
+        from bench_fleet import fleet_rows
+        return fleet_rows(fast=fast)
+
     fast = "--fast" in sys.argv
     strict = "--strict" in sys.argv  # exit nonzero if any job errors (CI)
     failed = []
@@ -58,6 +62,7 @@ def main() -> None:
         ("attn_flash", attn_flash, dict(fast=fast)),
         ("serve_fused", serve_fused, dict(fast=fast)),
         ("resilience", resilience, dict(fast=fast)),
+        ("fleet_study", fleet_study, dict(fast=fast)),
     ]
     print("name,us_per_call,derived")
     all_rows = {}

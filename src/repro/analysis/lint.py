@@ -4,10 +4,12 @@ Rules ruff cannot express because they encode *this* codebase's contracts
 (DESIGN.md §12):
 
 * **RL001** — no wall-clock/ambient randomness in ``src/repro/resilience/``
-  (the fault-clock code): ``time.time``/``time_ns``, stdlib ``random``,
+  (the fault-clock code) or ``src/repro/fleet/`` (the intermittency
+  simulator): ``time.time``/``time_ns``, stdlib ``random``,
   ``datetime.now`` and unseeded ``np.random`` calls all break the
-  determinism contract that chaos is a pure function of
-  (seed, mtbf, submit order) on the logical work clock.
+  determinism contract that chaos runs and fleet studies are pure
+  functions of (seed, mtbf/trace specs, submit order) on the logical
+  work clock.
 * **RL002** — no host syncs on traced values in ``src/repro``:
   ``float(jnp...)`` / ``int(jnp...)``, ``.item()``, ``np.asarray(jnp...)``
   force a device round trip; inside jitted serve dataflow they either
@@ -40,7 +42,8 @@ import os
 import re
 
 RULES = {
-    "RL001": "no wall-clock / ambient randomness in resilience fault-clock code",
+    "RL001": "no wall-clock / ambient randomness in resilience/fleet "
+             "fault-clock code",
     "RL002": "no host sync (float()/int()/.item()/np.asarray) on traced jnp values",
     "RL003": "no broad except that swallows without re-raise or recorded reason",
     "RL004": "pallas_call grid / BlockSpec index-map arity consistency",
@@ -96,7 +99,9 @@ def _mentions_jnp(node) -> bool:
 # ---------------------------------------------------------------------------
 
 def _rl001(tree, rel):
-    if not rel.startswith("src/repro/resilience/"):
+    # fault-clock code AND the fleet simulator: a fleet study is a pure
+    # function of (fleet seed, trace specs), same contract as chaos runs
+    if not rel.startswith(("src/repro/resilience/", "src/repro/fleet/")):
         return
     banned_calls = {"time.time", "time.time_ns", "time.monotonic",
                     "datetime.now", "datetime.utcnow",

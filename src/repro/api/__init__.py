@@ -13,6 +13,10 @@ by a :class:`HardwareTarget` (DESIGN.md §9).  The facade is three calls:
 intermittency-resume fast path).  The paper-table reproductions live in
 :mod:`repro.api.reports` (``simulate``, ``table2``, ``fig9_fig10``) —
 ``repro.pim.accelsim`` is a one-release deprecation shim over them.
+``api.fleet`` is the fleet-scale intermittency entry point (harvest
+traces, the fluid node simulator, per-node plan co-design — DESIGN.md
+§14): it re-exports :mod:`repro.fleet`, which prices nodes with the same
+targets registered here via ``core/plan.plan_cost_on``.
 """
 from .targets import (Cost, ComputeTarget, HardwareTarget, LayerGeometry,
                       PIMTarget, available_targets, get_target,
@@ -20,11 +24,12 @@ from .targets import (Cost, ComputeTarget, HardwareTarget, LayerGeometry,
 from .session import (CompiledModel, CostReport, Deployment, Model, build,
                       load)
 from . import reports
+from repro import fleet
 
 __all__ = [
     "Cost", "ComputeTarget", "HardwareTarget", "LayerGeometry", "PIMTarget",
     "available_targets", "get_target", "register_target",
     "target_for_backend",
     "CompiledModel", "CostReport", "Deployment", "Model", "build", "load",
-    "reports",
+    "reports", "fleet",
 ]

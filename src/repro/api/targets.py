@@ -34,7 +34,9 @@ from __future__ import annotations
 import dataclasses
 from typing import Sequence
 
-from repro.pim.energy import (CLOCK_GHZ, DESIGNS, SUBARRAY_COLS, DeviceModel)
+from repro.pim.energy import (CLOCK_GHZ, DESIGNS, SUBARRAY_COLS,
+                              TABLE2_AREA_MM2, TABLE2_ENERGY_SCALE,
+                              DeviceModel)
 from repro.pim.mapper import LayerWork, accel_cost
 
 
@@ -400,12 +402,12 @@ def target_for_backend(backend: str) -> ComputeTarget:
     return _REGISTRY["cpu"]
 
 
-# Energy scale per PIM design, fitted ONCE to the Table II ImageNet column
-# (repro.api.reports.calibrate refits; values pinned for determinism), and
-# the Table II / §III-E areas.  ASIC area: YodaNN-like logic + 33 MB eDRAM
-# @ ~0.1 um^2/bit (45 nm) ~= 30 mm^2.
-ENERGY_SCALE = dict(proposed=0.6602, imce=0.5586, reram=0.3662, asic=0.661)
-AREA_MM2 = dict(proposed=2.60, imce=2.12, reram=9.19, asic=30.0)
+# Energy scale per PIM design + Table II / §III-E areas.  The values live
+# in ``repro.pim.energy`` (single source of truth — the DeviceModel areas
+# derive from the same dicts); these names stay as the public re-export
+# spelling used by reports/accelsim.
+ENERGY_SCALE = TABLE2_ENERGY_SCALE
+AREA_MM2 = TABLE2_AREA_MM2
 
 CPU = register_target(CpuTarget())
 TPU = register_target(TpuTarget())

@@ -418,6 +418,36 @@ def plan_energy_pj(plan: ModelPlan) -> float:
     return float(sum(lp.cost[0] for lp in plan.layers if lp.cost))
 
 
+def plan_cost_on(plan: ModelPlan, target) -> dict:
+    """Re-price one forward pass of a compiled CNN plan on any PIM
+    :class:`repro.api.targets.HardwareTarget` (name or instance).
+
+    The plan's own per-layer ``cost`` annotations are priced against the
+    compile-time target; a fleet of heterogeneous nodes needs the *same*
+    plan priced on *different* accelerators without recompiling.  This is
+    the Table-II-pinned arithmetic (same works, same ``accel_cost``, same
+    fitted energy scale as ``pim/accelsim``), so the absolutes agree
+    bit-for-bit with ``CompiledModel.simulate``; it is the per-frame
+    ``(energy_uj, latency_us)`` currency of ``repro.fleet.sim``.
+    """
+    from repro.api.targets import PIMTarget, get_target
+    from repro.pim.mapper import works_from_layers
+
+    if plan.kind != "cnn":
+        raise PlanError(f"plan_cost_on prices CNN plans (the paper's "
+                        f"frame-per-inference scope); this plan is "
+                        f"{plan.kind!r}")
+    t = get_target(target) if isinstance(target, str) else target
+    if not isinstance(t, PIMTarget):
+        raise PlanError(
+            f"plan_cost_on prices PIM targets (got {t.name!r}); compute "
+            f"targets carry their cost in the plan's own annotations — "
+            f"sum lp.cost or use CompiledModel.simulate")
+    report = dict(t.report(works_from_layers(plan.layers)))
+    report["target"] = t.name
+    return report
+
+
 def layers_for_batch(plan: ModelPlan, batch: int):
     """The plan's layer sequence with engines re-pinned for ``batch`` (see
     :meth:`LayerPlan.engine_at` for the hint-miss policy)."""

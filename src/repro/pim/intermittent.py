@@ -109,19 +109,64 @@ def forward_progress(n_frames: int, frame_time_us: float, mtbf_us: float,
     )
 
 
+def _study_rng(seed, rng) -> np.random.RandomState:
+    """One RNG discipline for every multi-draw study: an explicit
+    ``RandomState`` wins, else a fresh one from ``seed`` — never ambient
+    global state, so every study is a pure function of its arguments."""
+    if rng is not None:
+        if not isinstance(rng, np.random.RandomState):
+            raise TypeError(f"rng must be a numpy RandomState, "
+                            f"got {type(rng).__name__}")
+        return rng
+    return np.random.RandomState(seed)
+
+
+def _aggregate(runs: list[dict]) -> dict:
+    """Mean ± 95% CI over repeated simulations.  Keeps the single-draw key
+    names (``efficiency``, ``completed_frames``, ``failures``, ...) as the
+    means so existing table/benchmark consumers read the same fields."""
+    out: dict = {}
+    n = len(runs)
+    for key in ("completed_frames", "failures", "total_time_us",
+                "wasted_us", "efficiency"):
+        vals = np.asarray([r[key] for r in runs], float)
+        out[key] = float(vals.mean())
+        # normal-approximation 95% CI half-width; 0 for a single draw
+        out[key + "_ci95"] = float(1.96 * vals.std(ddof=1) / np.sqrt(n)
+                                   if n > 1 else 0.0)
+    out["repeats"] = n
+    out["vulnerable_window_ps"] = runs[0]["vulnerable_window_ps"]
+    return out
+
+
 def sweep_checkpoint_period(periods=(0, 1, 2, 5, 10, 20, 50),
                             mtbf_us: float = 500.0, n_frames: int = 500,
-                            frame_time_us: float = 100.0) -> dict[int, dict]:
+                            frame_time_us: float = 100.0, seed: int = 0,
+                            repeats: int = 8, rng=None) -> dict[int, dict]:
     """Fig.-7-style study: efficiency vs NV write period (20 frames is the
-    paper's default; higher periods trade resilience for write energy)."""
-    return {p: forward_progress(n_frames, frame_time_us, mtbf_us, p)
+    paper's default; higher periods trade resilience for write energy).
+
+    Each period is simulated ``repeats`` times on seeds drawn from one
+    explicit RNG (``seed`` or a caller-supplied ``rng``); every reported
+    statistic is a mean with a ``*_ci95`` half-width alongside.
+    """
+    if repeats < 1:
+        raise ValueError(f"repeats must be >= 1, got {repeats}")
+    r = _study_rng(seed, rng)
+    # one seed block per period, drawn up front so adding a period never
+    # perturbs the seeds of the ones before it
+    seeds = {p: r.randint(0, 2**31 - 1, size=repeats) for p in periods}
+    return {p: _aggregate([forward_progress(n_frames, frame_time_us,
+                                            mtbf_us, p, seed=int(s))
+                           for s in seeds[p]])
             for p in periods}
 
 
 def plan_resume_study(compile_us: float, plan_load_us: float,
                       checkpoint_period_frames: int = 20,
                       mtbf_us: float = 500.0, n_frames: int = 500,
-                      frame_time_us: float = 100.0, seed: int = 0) -> dict:
+                      frame_time_us: float = 100.0, seed: int = 0,
+                      repeats: int = 16, rng=None) -> dict:
     """Restart-cost study: persisted ModelPlan vs full replan per failure.
 
     The paper's node resumes instantly because its execution mapping lives
@@ -129,14 +174,25 @@ def plan_resume_study(compile_us: float, plan_load_us: float,
     when the compiled plan (prequantized levels + engine verdicts) is on
     disk.  ``compile_us`` is the measured cold compile+autotune cost,
     ``plan_load_us`` the measured ``load_plan`` cost — both come from
-    ``benchmarks/bench_serve.plan_rows``.  Same failure seed on both arms,
-    so the delta is purely the resume overhead.
+    ``benchmarks/bench_serve.plan_rows``.
+
+    The study is ``repeats`` paired simulations: each repeat draws one
+    failure seed from an explicit RNG (``seed`` or ``rng``) and runs BOTH
+    arms on it, so the per-pair delta is purely the resume overhead.
+    Reported efficiencies are means with 95% CIs (``efficiency_ci95``);
+    ``efficiency_gain`` is the ratio of the arm means.
     """
+    if repeats < 1:
+        raise ValueError(f"repeats must be >= 1, got {repeats}")
+    r = _study_rng(seed, rng)
+    pair_seeds = [int(s) for s in r.randint(0, 2**31 - 1, size=repeats)]
     kw = dict(n_frames=n_frames, frame_time_us=frame_time_us,
               mtbf_us=mtbf_us,
-              checkpoint_period_frames=checkpoint_period_frames, seed=seed)
-    recompile = forward_progress(resume_us=compile_us, **kw)
-    reload_ = forward_progress(resume_us=plan_load_us, **kw)
+              checkpoint_period_frames=checkpoint_period_frames)
+    recompile = _aggregate([forward_progress(resume_us=compile_us, seed=s,
+                                             **kw) for s in pair_seeds])
+    reload_ = _aggregate([forward_progress(resume_us=plan_load_us, seed=s,
+                                           **kw) for s in pair_seeds])
     return dict(
         recompile=recompile, plan_reload=reload_,
         efficiency_gain=(reload_["efficiency"]

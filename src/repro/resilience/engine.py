@@ -152,7 +152,9 @@ class ResilientServeEngine(ServeEngine):
     degrade:         a :class:`repro.resilience.degrade.DegradePolicy`;
                      with ``fallbacks``, repeated faults or an exhausted
                      energy budget swap the runner to the next (lower-bit)
-                     plan and reset the retry budget.
+                     plan and reset the retry budget.  With the policy's
+                     ``recover_after`` set, a streak of clean dispatches
+                     re-arms the primary plan (``stats["recoveries"]``).
     fallbacks:       runners over pre-compiled degraded plans, best first.
     """
 
@@ -194,6 +196,7 @@ class ResilientServeEngine(ServeEngine):
         self.stats.update(
             faults=0, power_losses=0, device_drops=0, slow_dispatches=0,
             staging_retries=0, retries=0, dead_lettered=0, degrades=0,
+            recoveries=0,
             prefills=0, resumes=0, epochs=0, commits=0, commit_s=0.0,
             executed_steps=0, useful_steps=0, wasted_steps=0.0,
             energy_pj=0.0)
@@ -284,6 +287,28 @@ class ResilientServeEngine(ServeEngine):
         self.stats["degrades"] += 1
         if self.ckpt is not None:
             # every outstanding checkpoint names the retired plan fingerprint
+            self.ckpt.purge_all()
+
+    def _maybe_recover(self) -> None:
+        """Re-arm the primary plan once fault pressure has subsided: the
+        inverse of :meth:`_maybe_degrade`, gated by the policy's clean-
+        dispatch streak.  Recovery jumps straight back to runner 0 (the
+        best operating point — intermediate fallbacks only matter on the
+        way *down*) and restores the unit energy scale that the degrades
+        had discounted."""
+        if self.policy is None or self._active == 0:
+            return
+        if not self.policy.should_recover():
+            return
+        self.runner = self._runners[0]
+        self._active = 0
+        self._energy_scale = 1.0
+        self._params = jax.device_put(self.runner.params)
+        self._attempts.clear()   # fresh retry budget at the restored point
+        self.policy.reset()
+        self.stats["recoveries"] += 1
+        if self.ckpt is not None:
+            # outstanding checkpoints name the degraded plan fingerprint
             self.ckpt.purge_all()
 
     @staticmethod
@@ -482,3 +507,4 @@ class ResilientServeEngine(ServeEngine):
         if self.policy is not None:
             self.policy.record_dispatch(energy)
             self._maybe_degrade()
+            self._maybe_recover()

@@ -34,6 +34,7 @@ Event kinds and who may draw them:
 from __future__ import annotations
 
 import dataclasses
+import json
 
 import numpy as np
 
@@ -86,7 +87,7 @@ class FaultEvent:
 class FaultPlan:
     """A seeded, deterministic schedule of fault events.
 
-    Two construction modes:
+    Three construction modes:
 
     * ``FaultPlan(mtbf, seed=..)`` — random schedule: inter-fault gaps are
       exponential with mean ``mtbf`` logical steps; the kind of each fault
@@ -97,9 +98,20 @@ class FaultPlan:
       ``n``-th poll of ``site`` (0-based, counted per site).  This is the
       test surface: "kill the first prefill", "corrupt the second staging"
       are one tuple each, with no RNG in the way.
+    * ``FaultPlan.timeline([(t, kind), ..])`` — fire ``kind`` at fixed
+      work-clock times, whichever site happens to be polling when the
+      clock reaches ``t``.  This is how an energy-harvest trace becomes a
+      live fault schedule: ``repro.fleet.sim`` derives outage instants
+      from a trace and both the fleet simulator and the serve engine
+      consume the *same* event list.  Only site-universal kinds
+      (``power_loss``) are allowed — a timeline does not know which site
+      will observe it.
 
-    ``FaultPlan(None)`` never fires — the fault-free reference arm of every
-    bit-identity assertion runs through the identical engine code path.
+    Modes compose (scripted events take precedence, then timeline, then
+    random); :meth:`to_json`/:meth:`from_json` round-trip the construction
+    spec so chaos tests, benchmarks, and fleet traces share one on-disk
+    format.  ``FaultPlan(None)`` never fires — the fault-free reference
+    arm of every bit-identity assertion runs the identical code path.
     """
 
     def __init__(self, mtbf: float | None, *, seed: int = 0,
@@ -108,6 +120,7 @@ class FaultPlan:
             raise ValueError(f"mtbf must be positive (logical decode steps) "
                              f"or None for no random faults, got {mtbf}")
         self.mtbf = mtbf
+        self.seed = int(seed)
         self.weights = dict(weights or DEFAULT_WEIGHTS)
         unknown = set(self.weights) - set(KINDS)
         if unknown:
@@ -118,6 +131,8 @@ class FaultPlan:
         self._next = (self._t + self._rng.exponential(mtbf)
                       if mtbf is not None else float("inf"))
         self._scripted: dict[tuple[str, int], str] = {}
+        self._timeline: list[tuple[float, str]] = []
+        self._timeline_idx = 0
         self._site_calls: dict[str, int] = {}
         self.log: list[FaultEvent] = []
 
@@ -134,6 +149,71 @@ class FaultPlan:
                                  f"(allowed: {SITE_KINDS[site]})")
             plan._scripted[(site, int(n))] = kind
         return plan
+
+    @classmethod
+    def timeline(cls, events) -> "FaultPlan":
+        """``events``: iterable of ``(work_clock_t, kind)``, non-decreasing
+        ``t >= 0``.  Each event fires inside the first poll whose window
+        reaches ``t`` (the clock stops at the event, like random mode)."""
+        universal = set(KINDS)
+        for kinds in SITE_KINDS.values():
+            universal &= set(kinds)
+        plan = cls(None)
+        prev = 0.0
+        for t, kind in events:
+            t = float(t)
+            if t < 0:
+                raise ValueError(f"timeline t must be >= 0, got {t}")
+            if t < prev:
+                raise ValueError(f"timeline times must be non-decreasing "
+                                 f"(got {t} after {prev})")
+            if kind not in universal:
+                raise ValueError(
+                    f"kind {kind!r} is not valid at every site (a timeline "
+                    f"does not know which site observes it); allowed: "
+                    f"{sorted(universal)}")
+            plan._timeline.append((t, kind))
+            prev = t
+        return plan
+
+    # -- serialization (one on-disk format for chaos + fleet schedules) ------
+
+    def to_json(self) -> dict:
+        """The *construction* spec (not mid-run polling state): feeding the
+        result to :meth:`from_json` yields a fresh, equivalent plan."""
+        return dict(
+            version=1,
+            mtbf=self.mtbf,
+            seed=self.seed,
+            weights=dict(self.weights),
+            scripted=[[site, n, kind]
+                      for (site, n), kind in sorted(self._scripted.items())],
+            timeline=[[t, kind] for t, kind in self._timeline],
+        )
+
+    @classmethod
+    def from_json(cls, spec: dict) -> "FaultPlan":
+        version = spec.get("version", 1)
+        if version != 1:
+            raise ValueError(f"unknown FaultPlan spec version {version!r}")
+        plan = cls(spec.get("mtbf"), seed=spec.get("seed", 0),
+                   weights=spec.get("weights") or None)
+        if spec.get("scripted"):
+            scripted = cls.scripted(spec["scripted"])
+            plan._scripted = scripted._scripted
+        if spec.get("timeline"):
+            timeline = cls.timeline(spec["timeline"])
+            plan._timeline = timeline._timeline
+        return plan
+
+    def save(self, path) -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_json(), f, indent=1, sort_keys=True)
+
+    @classmethod
+    def load(cls, path) -> "FaultPlan":
+        with open(path) as f:
+            return cls.from_json(json.load(f))
 
     # -- polling -------------------------------------------------------------
 
@@ -153,6 +233,15 @@ class FaultPlan:
             self.log.append(ev)
             return ev
         end = self._t + dt
+        if self._timeline_idx < len(self._timeline):
+            ft, tkind = self._timeline[self._timeline_idx]
+            if ft <= end:
+                self._timeline_idx += 1
+                offset = max(0.0, ft - self._t)
+                self._t = max(self._t, ft)
+                ev = FaultEvent(tkind, site, self._t, offset, len(self.log))
+                self.log.append(ev)
+                return ev
         if self._next <= end:
             ft = self._next
             offset = ft - self._t

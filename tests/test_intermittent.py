@@ -238,3 +238,51 @@ def test_vulnerable_window_model():
     t = NVFATiming()
     assert t.vulnerable_window_ps(1, 8) == pytest.approx(9 * 58.0)
     assert t.vulnerable_window_ps(2, 2) == pytest.approx(4 * 58.0)
+
+
+def test_sweep_checkpoint_period_rng_discipline():
+    """The sweep is a pure function of its explicit seed/RNG: same seed ->
+    identical aggregates; a caller-supplied RandomState reproduces the
+    seed path; anything else is rejected; every statistic carries a 95%
+    CI half-width and the repeat count."""
+    from repro.pim.intermittent import sweep_checkpoint_period
+
+    kw = dict(periods=(0, 5, 20), mtbf_us=300.0, n_frames=100,
+              frame_time_us=1.0, repeats=4)
+    a = sweep_checkpoint_period(seed=7, **kw)
+    assert a == sweep_checkpoint_period(seed=7, **kw)
+    assert a != sweep_checkpoint_period(seed=8, **kw)
+    assert a == sweep_checkpoint_period(rng=np.random.RandomState(7), **kw)
+    with pytest.raises(TypeError, match="RandomState"):
+        sweep_checkpoint_period(rng=42, **kw)
+    with pytest.raises(ValueError, match="repeats"):
+        sweep_checkpoint_period(repeats=0)
+    for r in a.values():
+        assert r["repeats"] == 4
+        for key in ("efficiency", "completed_frames", "failures"):
+            assert r[key + "_ci95"] >= 0.0
+    # seeds are drawn per period up front: extending the period list never
+    # perturbs the aggregates of the periods before it
+    b = sweep_checkpoint_period(seed=7, periods=(0, 5, 20, 50),
+                                mtbf_us=300.0, n_frames=100,
+                                frame_time_us=1.0, repeats=4)
+    assert {p: b[p] for p in (0, 5, 20)} == a
+
+
+def test_plan_resume_study_paired_and_reproducible():
+    """Both arms run on the SAME per-repeat failure seeds (paired draws),
+    so cheaper resume can only help: reload efficiency >= recompile on
+    the arm means, and the whole study replays bit-for-bit."""
+    from repro.pim.intermittent import plan_resume_study
+
+    kw = dict(compile_us=4000.0, plan_load_us=26.0, mtbf_us=300.0,
+              n_frames=100, frame_time_us=1.0, repeats=6)
+    a = plan_resume_study(seed=3, **kw)
+    assert a == plan_resume_study(seed=3, **kw)
+    assert a == plan_resume_study(rng=np.random.RandomState(3), **kw)
+    assert a["recompile"]["repeats"] == a["plan_reload"]["repeats"] == 6
+    assert a["plan_reload"]["efficiency"] >= a["recompile"]["efficiency"]
+    assert a["efficiency_gain"] >= 1.0
+    assert a["plan_reload"]["efficiency_ci95"] >= 0.0
+    with pytest.raises(ValueError, match="repeats"):
+        plan_resume_study(4000.0, 26.0, repeats=0)

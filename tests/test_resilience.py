@@ -9,6 +9,7 @@ from the last committed epoch, bounded retries -> dead letters, deadlines,
 and degraded-plan fallback.
 """
 import dataclasses
+import json
 
 import jax
 import numpy as np
@@ -115,6 +116,40 @@ def _assert_identical(results, ref):
     assert len(results) == len(ref)
     for r, v in zip(results, ref):
         np.testing.assert_array_equal(r.value, v)
+
+
+def test_fault_plan_json_roundtrip_all_modes(tmp_path):
+    """to_json/from_json round-trips the CONSTRUCTION spec: a reloaded
+    plan replays the identical event schedule in every mode (the one
+    on-disk format shared by chaos tests, bench_resilience, and fleet
+    outage timelines)."""
+    def replay(p, n=30):
+        return [(e.kind, e.site, e.t, e.offset)
+                for _ in range(n) for e in [p.poll("decode", dt=2.0)]
+                if e is not None]
+
+    random_p = FaultPlan(3.0, seed=11, weights={"power_loss": 1.0})
+    scripted = FaultPlan.scripted([("decode", 2, "power_loss"),
+                                   ("decode", 5, "device_drop")])
+    timeline = FaultPlan.timeline([(1.5, "power_loss"), (9.0, "power_loss")])
+    for plan in (random_p, scripted, timeline, FaultPlan(None)):
+        spec = json.loads(json.dumps(plan.to_json()))
+        assert replay(FaultPlan.from_json(spec)) == replay(
+            FaultPlan.from_json(plan.to_json()))
+    # polling state is NOT serialized: a mid-run plan still round-trips
+    # to a fresh equivalent plan
+    half = FaultPlan(3.0, seed=11, weights={"power_loss": 1.0})
+    replay(half, n=7)
+    assert replay(FaultPlan.from_json(half.to_json())) == replay(
+        FaultPlan(3.0, seed=11, weights={"power_loss": 1.0}))
+    # file round-trip + version guard
+    path = tmp_path / "plan.json"
+    scripted.save(path)
+    assert replay(FaultPlan.load(path)) == replay(
+        FaultPlan.scripted([("decode", 2, "power_loss"),
+                            ("decode", 5, "device_drop")]))
+    with pytest.raises(ValueError, match="version"):
+        FaultPlan.from_json({"version": 99})
 
 
 def test_lm_epoch_schedule():
@@ -399,6 +434,92 @@ def test_energy_budget_degrades_between_batches(compiled_pair, tmp_path):
     by_runner = {r.rid: eng.result_runner[r.rid] for r in first + second}
     assert set(by_runner.values()) == {0, 1}
     assert all(eng.result_runner[r.rid] == 1 for r in second)
+
+
+def test_degrade_policy_edge_cases():
+    """Window/threshold/recover_after degenerate values + streak algebra."""
+    # zero-width pressure window is rejected at construction, not silently
+    # never-triggering (deque(maxlen=0) would drop every observation)
+    with pytest.raises(ValueError):
+        DegradePolicy(fault_window=0, fault_threshold=1)
+    with pytest.raises(ValueError):
+        DegradePolicy(recover_after=0)
+    # streak: builds on clean dispatches, zeroes on any fault, survives
+    # exactly the recover_after boundary
+    p = DegradePolicy(recover_after=2)
+    p.record_dispatch()
+    assert p.clean_streak() == 1 and not p.should_recover()
+    p.record_fault()
+    assert p.clean_streak() == 0
+    p.record_dispatch()
+    p.record_dispatch()
+    assert p.should_recover()
+    p.reset()
+    assert p.clean_streak() == 0 and not p.should_recover()
+    # recover_after=None: degrades are one-way no matter the streak
+    q = DegradePolicy()
+    for _ in range(100):
+        q.record_dispatch()
+    assert not q.should_recover()
+
+
+def test_equal_energy_fallback_keeps_unit_scale(compiled_pair, tmp_path):
+    """A fallback whose modeled energy EQUALS the primary's gives no
+    effective MTBF gain: the engine still swaps (forward progress may come
+    from the fresh retry budget) but the energy-weighted fault clock must
+    keep scale 1.0 — degrading to an equally hungry plan must not dilate
+    fault exposure."""
+    from repro import api
+    from repro.core.plan import plan_energy_pj
+    from repro.resilience import ResilienceConfig
+
+    primary, _, prompts = compiled_pair
+    cfg, params = _lm_setup()          # same quant as the primary
+    clone = api.build(cfg, params=params).compile(batch_hints=(1, 4),
+                                                  prompt_len=8)
+    assert plan_energy_pj(clone.plan) == plan_energy_pj(primary.plan) > 0
+    dep = primary.serve(resilience=ResilienceConfig(
+        fault_plan=FaultPlan.scripted([("prefill", 0, "power_loss"),
+                                       ("prefill", 1, "power_loss")]),
+        checkpoint_dir=str(tmp_path), epoch_steps=2,
+        degrade=DegradePolicy(fault_window=4, fault_threshold=2)),
+        fallback=clone, new_tokens=NEW_TOKENS, max_batch=4)
+    eng = dep.engine
+    res = eng.serve(prompts)
+    assert eng.stats["degrades"] == 1
+    assert eng._energy_scale == 1.0
+    assert len(res) == len(prompts) and not eng.dead_letters
+
+
+def test_recovery_rearms_primary_plan(compiled_pair, tmp_path):
+    """After a fault-pressure degrade, ``recover_after`` consecutive clean
+    dispatches re-arm the primary: the next batch is served by runner 0
+    with outputs bit-identical to the primary's fault-free run, the energy
+    scale is restored to 1.0, and stats['recoveries'] records it."""
+    from repro.resilience import ResilienceConfig
+
+    primary, fallback, prompts = compiled_pair
+    ref_dep = primary.serve(resilience=ResilienceConfig(),
+                            new_tokens=NEW_TOKENS, max_batch=4)
+    ref = [r.value for r in ref_dep.engine.serve(prompts)]
+
+    dep = primary.serve(resilience=ResilienceConfig(
+        fault_plan=FaultPlan.scripted([("prefill", 0, "power_loss"),
+                                       ("prefill", 1, "power_loss")]),
+        checkpoint_dir=str(tmp_path), epoch_steps=2,
+        degrade=DegradePolicy(fault_window=4, fault_threshold=2,
+                              recover_after=1)),
+        fallback=fallback, new_tokens=NEW_TOKENS, max_batch=4)
+    eng = dep.engine
+    first = eng.serve(prompts)           # kills -> degrade -> clean dispatch
+    assert eng.stats["degrades"] == 1
+    assert eng.stats["recoveries"] == 1  # the completing dispatch re-arms
+    assert eng._active == 0 and eng._energy_scale == 1.0
+    assert all(eng.result_runner[r.rid] == 1 for r in first)
+    second = eng.serve(prompts)          # back on the primary plan
+    assert all(eng.result_runner[r.rid] == 0 for r in second)
+    for r, v in zip(second, ref):
+        np.testing.assert_array_equal(r.value, v)
 
 
 # ---------------------------------------------------------------------------
